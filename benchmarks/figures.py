@@ -1,0 +1,111 @@
+"""One module per paper figure: each emits the figure's data as CSV rows.
+
+Figures 7–13 come from the analytical CIM model (the reproduction of the
+paper's simulator evaluation); each row also carries the paper's published
+value where one exists, so the reproduction error is visible inline.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+from repro.perfmodel import (DEFAULT_HW as HW, GPU, encoder_layer_energy_j,
+                             encoder_layer_latency_s, end_to_end_tops,
+                             softmax_energy_j, softmax_fraction,
+                             softmax_latency_s, tops_per_watt)
+
+Row = Tuple[str, float, str]
+
+SEQ_SWEEP = (128, 256, 512, 1024, 2048, 4096, 8192)
+EMB_SWEEP = (512, 768, 1024)
+
+
+def fig7_softmax_latency() -> Iterator[Row]:
+    """Softmax latency per vector × l × mode × ALU width (paper Fig 7)."""
+    paper = {("puma", 8192, 16): 22.13, ("uclm", 8192, 16): 6.0,
+             ("multicore", 8192, 16): 1.36}
+    for mode in ("puma", "uclm", "multicore"):
+        for l in SEQ_SWEEP:
+            for w in (16, 64):
+                us = softmax_latency_s(HW, l, mode, w) * 1e6
+                p = paper.get((mode, l, w))
+                note = f"paper={p}" if p else ""
+                yield (f"fig7/softmax_{mode}_l{l}_w{w}", us, note)
+
+
+def fig8_softmax_energy() -> Iterator[Row]:
+    """Softmax energy per vector (paper Fig 8; ratio ≈1.6 for l>1024)."""
+    for mode in ("puma", "uclm", "multicore"):
+        for l in SEQ_SWEEP:
+            nj = softmax_energy_j(HW, l, mode) * 1e9
+            ratio = (softmax_energy_j(HW, l, "puma")
+                     / softmax_energy_j(HW, l, mode))
+            yield (f"fig8/softmax_energy_{mode}_l{l}", nj,
+                   f"puma_ratio={ratio:.2f}")
+
+
+def fig9_layer_latency() -> Iterator[Row]:
+    """Encoder-layer latency × (softmax accel, pipelining) (paper Fig 9)."""
+    arms = [("puma", "none"), ("hastily", "none"),
+            ("puma", "coarse"), ("hastily", "fine")]
+    for d in EMB_SWEEP:
+        for l in SEQ_SWEEP:
+            base = encoder_layer_latency_s(HW, l, d, softmax_mode="puma",
+                                           pipelined="none")
+            for sm, pipe in arms:
+                us = encoder_layer_latency_s(HW, l, d, softmax_mode=sm,
+                                             pipelined=pipe) * 1e6
+                yield (f"fig9/layer_d{d}_l{l}_{sm}_{pipe}", us,
+                       f"speedup_vs_puma={base / (us / 1e6):.2f}")
+
+
+def fig10_runtime_breakdown() -> Iterator[Row]:
+    """Softmax share of un-pipelined layer runtime (paper Fig 10)."""
+    paper = {("puma", 1024, 768): 0.38, ("hastily", 1024, 768): 0.13}
+    for d in (768, 1024):
+        for l in (512, 1024):
+            for mode in ("puma", "hastily"):
+                frac = softmax_fraction(HW, l, d, mode)
+                p = paper.get((mode, l, d))
+                yield (f"fig10/softmax_frac_{mode}_d{d}_l{l}", frac * 100,
+                       f"paper={p * 100:.0f}%" if p else "")
+
+
+def fig11_layer_energy() -> Iterator[Row]:
+    """Encoder-layer energy (paper Fig 11)."""
+    for d in EMB_SWEEP:
+        for l in SEQ_SWEEP:
+            for mode in ("puma", "hastily"):
+                uj = encoder_layer_energy_j(HW, l, d, softmax_mode=mode) * 1e6
+                yield (f"fig11/layer_energy_{mode}_d{d}_l{l}", uj, "")
+
+
+def fig12_end2end_tops() -> Iterator[Row]:
+    """End-to-end TOPS, BERT-Base/Large × batch (paper Fig 12)."""
+    models = {"bert_base": (12, 768, 3072, 158.0),
+              "bert_large": (24, 1024, 4096, 263.0)}
+    for name, (n, d, ff, paper_tops) in models.items():
+        for batch in (1, 2, 4):
+            t = end_to_end_tops(HW, n, 512, d, ff, batch=batch)
+            note = f"paper={paper_tops} (b>=2)" if batch >= 2 else \
+                f"gpu={GPU.tops_bert_base_b1}" if name == "bert_base" else ""
+            yield (f"fig12/tops_{name}_b{batch}", t, note)
+        puma = end_to_end_tops(HW, n, 512, d, ff, pipelined="coarse",
+                               softmax_mode="puma", batch=1)
+        yield (f"fig12/tops_puma_{name}_b1", puma,
+               "paper=26" if name == "bert_base" else "")
+
+
+def fig13_energy_efficiency() -> Iterator[Row]:
+    """TOPS/W (paper Fig 13: HASTILY ≈ 8, GPU 0.3–0.9)."""
+    models = {"bert_base": (12, 768, 3072), "bert_large": (24, 1024, 4096)}
+    for name, (n, d, ff) in models.items():
+        for batch in (1, 2, 4):
+            tw = tops_per_watt(HW, n, 512, d, ff, batch=batch)
+            yield (f"fig13/tops_w_{name}_b{batch}", tw, "paper~8")
+    yield ("fig13/tops_w_gpu_b1", GPU.tops_w_b1, "paper anchor")
+    yield ("fig13/tops_w_gpu_b4", GPU.tops_w_b4, "paper anchor")
+
+
+ALL_FIGURES = (fig7_softmax_latency, fig8_softmax_energy, fig9_layer_latency,
+               fig10_runtime_breakdown, fig11_layer_energy,
+               fig12_end2end_tops, fig13_energy_efficiency)

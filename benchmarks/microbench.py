@@ -1,0 +1,84 @@
+"""Wall-clock microbenchmarks of the JAX/Pallas implementation on this host.
+
+CPU timings are NOT the TPU performance claim (that's §Roofline); they
+certify that the code paths run and give relative A/B signals (LUT vs exact
+exp, streaming vs naive attention, kernel vs reference).
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_lut_exp() -> Iterator[Row]:
+    from repro.core.lut_exp import lut_exp
+    x = jnp.linspace(-10, 10, 1 << 16)
+    f_lut = jax.jit(lambda v: lut_exp(v))
+    f_exact = jax.jit(jnp.exp)
+    us_l = _timeit(f_lut, x)
+    us_e = _timeit(f_exact, x)
+    yield ("micro/lut_exp_64k", us_l, f"exact={us_e:.1f}us")
+    from repro.kernels import lut_exp as k_lut
+    yield ("micro/lut_exp_kernel_64k",
+           _timeit(jax.jit(lambda v: k_lut(v)), x), "interpret mode")
+
+
+def bench_attention() -> Iterator[Row]:
+    from repro.core.streaming_attention import (naive_attention,
+                                                streaming_attention)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 8, 512, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 8, 512, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 8, 512, 64)).astype(np.float32))
+    f_s = jax.jit(lambda a, b, c: streaming_attention(a, b, c, causal=True,
+                                                      block_k=128))
+    f_n = jax.jit(lambda a, b, c: naive_attention(a, b, c, causal=True))
+    yield ("micro/streaming_attn_512", _timeit(f_s, q, k, v), "O(l) memory")
+    yield ("micro/naive_attn_512", _timeit(f_n, q, k, v), "O(l^2) memory")
+
+
+def bench_int8() -> Iterator[Row]:
+    from repro.core.quant import int8_matmul, quantize
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256, 1024)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(1024, 1024)).astype(np.float32))
+    wq = quantize(w, axis=0)
+    f_q = jax.jit(lambda a: int8_matmul(a, wq))
+    f_f = jax.jit(lambda a: a @ w)
+    yield ("micro/int8_matmul_256x1024x1024", _timeit(f_q, x), "")
+    yield ("micro/f32_matmul_256x1024x1024", _timeit(f_f, x), "")
+
+
+def bench_train_step() -> Iterator[Row]:
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("deepseek-7b-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)),
+                                   jnp.int32)}
+    batch["labels"] = batch["tokens"]
+    step = jax.jit(lambda p, b: jax.grad(
+        lambda q: model.loss(q, b)[0])(p))
+    yield ("micro/train_grad_smoke_4x64", _timeit(step, params, batch,
+                                                  iters=3), "")
+
+
+ALL_MICRO = (bench_lut_exp, bench_attention, bench_int8, bench_train_step)

@@ -1,0 +1,72 @@
+"""§Roofline table: read the dry-run JSONs and emit per-cell terms.
+
+Columns per (arch × shape × mesh): compute/memory/collective seconds,
+dominant term, MODEL_FLOPS/HLO_FLOPS ratio.  The dry-run must have been run
+first (``python -m repro.launch.dryrun --all --mesh both``).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Iterator, List, Tuple
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_cells(results_dir: str = RESULTS_DIR) -> List[Dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def roofline_rows() -> Iterator[Tuple[str, float, str]]:
+    for c in load_cells():
+        tag = f"{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c.get("status") != "ok":
+            yield (f"roofline/{tag}", 0.0, c.get("status", "?"))
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        note = (f"dominant={r['dominant']} "
+                f"useful={r['useful_flop_ratio']:.2f} "
+                f"peakGiB={m['peak_bytes'] / 2 ** 30:.1f} "
+                f"fits={bool(m['fits'])}")
+        yield (f"roofline/{tag}/compute_s", r["compute_s"], note)
+        yield (f"roofline/{tag}/memory_s", r["memory_s"], "upper bound")
+        yield (f"roofline/{tag}/memory_lb_s", r.get("memory_lb_s", 0.0),
+               "fused lower bound")
+        yield (f"roofline/{tag}/collective_s", r["collective_s"], "")
+
+
+def markdown_table(results_dir: str = RESULTS_DIR) -> str:
+    """The EXPERIMENTS.md §Roofline table."""
+    lines = [
+        "| arch | shape | mesh | compute s | memory s (ub/lb) | "
+        "collective s | dominant | useful FLOP ratio | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in load_cells(results_dir):
+        if c.get("status") != "ok":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | "
+                f"{c.get('status', '?')[:40]} | — | — | — |")
+            continue
+        r, m = c["roofline"], c["memory"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} / {r.get('memory_lb_s', 0):.3g} "
+            f"| {r['collective_s']:.3g} "
+            f"| {r['dominant']} "
+            f"| {r['useful_flop_ratio']:.2f} "
+            f"| {m['peak_bytes'] / 2 ** 30:.2f} "
+            f"| {'✓' if m['fits'] else '✗'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

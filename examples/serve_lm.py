@@ -1,0 +1,54 @@
+"""End-to-end serving driver (the paper's kind: inference): batched
+requests through the slot-based continuous-batching engine, mixed prompt
+lengths and sampling temperatures, with throughput accounting.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-9b-smoke]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b-smoke")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, slots=args.slots,
+                           max_len=args.max_len)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        engine.submit(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(4, 24))).astype(np.int32),
+            max_new=int(rng.integers(4, 16)),
+            temperature=0.0 if i % 2 == 0 else 0.7))
+
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.tokens) for r in done)
+    print(f"{cfg.name}: served {len(done)} requests / {n_tok} tokens on "
+          f"{args.slots} slots in {dt:.2f}s ({n_tok / dt:.1f} tok/s, CPU)")
+    for r in sorted(done, key=lambda r: r.uid)[:6]:
+        mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
+        print(f"  req {r.uid:2d} ({mode:7s}, prompt {len(r.prompt):2d}): "
+              f"{r.tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""End-to-end training driver: a small LM on the deterministic Markov
+corpus, with checkpointing, failure injection, and auto-resume — the whole
+fault-tolerant runtime in one script.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--arch ...]
+
+The default (~200 steps of a reduced starcoder2) takes a few minutes on CPU
+and the loss drops well below the uniform baseline ln(V).
+"""
+import argparse
+import math
+import tempfile
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.runtime import FailureInjector, TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b-smoke")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--inject-failure", action="store_true",
+                    help="kill the 'node' twice mid-run to show recovery")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.batch, corpus="lm")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainConfig(steps=args.steps, lr=args.lr, warmup=10,
+                           ckpt_dir=ckpt_dir, ckpt_every=25)
+        trainer = Trainer(cfg, dcfg, tcfg)
+        injector = None
+        if args.inject_failure:
+            injector = FailureInjector(
+                fail_at_steps=(args.steps // 3, 2 * args.steps // 3))
+            print(f"will inject failures at steps {injector.fail_at_steps}")
+        metrics = trainer.run(injector=injector)
+
+    uniform = math.log(cfg.vocab_size)
+    print(f"\n{'step':>6} {'loss':>8} {'lr':>9} {'ms':>7}")
+    for m in metrics[:: max(len(metrics) // 15, 1)] + [metrics[-1]]:
+        print(f"{m['step']:6d} {m['loss']:8.4f} {m['lr']:9.2e} "
+              f"{m['ms']:7.0f}")
+    print(f"\nuniform baseline ln(V) = {uniform:.3f}; "
+          f"final loss = {metrics[-1]['loss']:.3f}")
+    assert metrics[-1]["loss"] < 0.8 * uniform, "did not learn"
+    print("training signal confirmed ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.store import (AsyncCheckpointer, flatten_tree,
+                                    latest_step, restore, retain, save, steps,
+                                    unflatten_into)
+
+__all__ = ["save", "restore", "latest_step", "steps", "retain",
+           "AsyncCheckpointer", "flatten_tree", "unflatten_into"]

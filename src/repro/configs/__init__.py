@@ -1,0 +1,74 @@
+"""Config registry: ``get_config(name)`` / ``--arch <id>``.
+
+The 10 assigned architectures (each with its own input-shape set) plus the
+paper's own BERT models.  Shape cells are defined in ``SHAPES`` and the
+applicability matrix in ``CELLS`` (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ModelConfig, reduced
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.granite_moe_3b_a800m import CONFIG as _granite
+from repro.configs.grok_1_314b import CONFIG as _grok
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon
+from repro.configs.internvl2_1b import CONFIG as _internvl
+from repro.configs.zamba2_1p2b import CONFIG as _zamba
+from repro.configs.starcoder2_3b import CONFIG as _starcoder
+from repro.configs.gemma2_9b import CONFIG as _gemma2
+from repro.configs.deepseek_7b import CONFIG as _deepseek
+from repro.configs.gemma3_12b import CONFIG as _gemma3
+from repro.configs.bert import BERT_BASE, BERT_LARGE
+
+_REGISTRY: Dict[str, ModelConfig] = {c.name: c for c in [
+    _seamless, _granite, _grok, _falcon, _internvl,
+    _zamba, _starcoder, _gemma2, _deepseek, _gemma3,
+    BERT_BASE, BERT_LARGE,
+]}
+
+ASSIGNED: Tuple[str, ...] = (
+    "seamless-m4t-large-v2", "granite-moe-3b-a800m", "grok-1-314b",
+    "falcon-mamba-7b", "internvl2-1b", "zamba2-1.2b", "starcoder2-3b",
+    "gemma2-9b", "deepseek-7b", "gemma3-12b",
+)
+
+# (seq_len, global_batch, step kind)
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+# long_500k runs only for sub-quadratic archs (SSM / hybrid / local-window);
+# skipped cells carry the reason string (recorded in EXPERIMENTS.md).
+_LONG_OK = {"falcon-mamba-7b", "zamba2-1.2b", "gemma2-9b", "gemma3-12b"}
+
+
+def cell_status(arch: str, shape: str) -> str:
+    """'run' or 'skip:<reason>' for an (arch × shape) cell."""
+    if shape == "long_500k" and arch not in _LONG_OK:
+        return "skip:pure full-attention arch — 500k context is quadratic (DESIGN.md)"
+    return "run"
+
+
+def all_cells() -> List[Tuple[str, str, str]]:
+    return [(a, s, cell_status(a, s)) for a in ASSIGNED for s in SHAPES]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return reduced(get_config(name[: -len("-smoke")]))
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+__all__ = ["ModelConfig", "reduced", "get_config", "list_configs",
+           "ASSIGNED", "SHAPES", "cell_status", "all_cells",
+           "BERT_BASE", "BERT_LARGE"]

@@ -1,0 +1,185 @@
+"""Model / run configuration.
+
+One frozen dataclass covers all assigned architecture families; each family reads
+the fields it needs.  ``reduced()`` derives the CPU smoke-test variant of any
+config (same family/topology, tiny widths) as required by the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # --- identity ---
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | bert
+    source: str = ""                 # provenance note ([arXiv/hf; tier])
+
+    # --- trunk dimensions ---
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # --- attention behaviour ---
+    rope_theta: float = 10_000.0
+    local_rope_theta: Optional[float] = None   # gemma3: local layers use 10k
+    window: Optional[int] = None               # sliding-window size (local layers)
+    layer_pattern: Tuple[str, ...] = ()        # cycled over layers, e.g. ("local","global")
+    attn_softcap: Optional[float] = None       # gemma2 logit soft-capping
+    final_softcap: Optional[float] = None      # gemma2 final-logit soft-capping
+    qk_norm: bool = False                      # gemma3
+    attn_bias: bool = False                    # starcoder2 / bert
+    attn_scale: Optional[float] = None         # default 1/sqrt(head_dim)
+    post_block_norm: bool = False              # gemma2/3: extra post-attn/mlp norms
+
+    # --- mlp / norms / embeddings ---
+    mlp_gated: bool = True
+    act: str = "silu"                          # silu | gelu
+    norm: str = "rmsnorm"                      # rmsnorm | layernorm
+    postnorm: bool = False                     # BERT-style post-LN
+    pos_embedding: str = "rope"                # rope | learned | none
+    tie_embeddings: bool = True
+    embed_scale: bool = False                  # gemma: scale embeddings by sqrt(d)
+    max_position: int = 1 << 20                # learned-pos table size cap
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_group: int = 512               # tokens per dispatch group (GShard G)
+
+    # --- SSM ---
+    ssm_state: int = 0
+    ssm_variant: str = ""                      # mamba1 | mamba2
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64                     # mamba2
+    ssm_groups: int = 1                        # mamba2 B/C groups
+    ssm_chunk: int = 128                       # chunked-scan length
+    ssm_dt_rank: int = 0                       # mamba1 (0 → d_model//16)
+    hybrid_period: int = 0                     # zamba2: shared attn every N blocks
+
+    # --- encoder-decoder ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+
+    # --- modality frontend stubs ---
+    frontend: str = ""                         # audio | vision | ""
+    frontend_len: int = 256                    # patches / audio frames in the prefix
+
+    # --- numerics & HASTILY technique toggles ---
+    dtype: str = "bfloat16"
+    attn_impl: str = "streaming"               # streaming (HASTILY) | naive (baseline)
+    exp_mode: str = "lut"                      # lut | lut0 | exact
+    block_k: int = 512
+    use_int8: bool = False
+    kv_quant: bool = False                     # int8 KV caches (serving)
+    remat: bool = True
+    scan_layers: bool = True
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- derived ----
+    @property
+    def d_head(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or max(self.d_model // 16, 1)
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        """Per-layer kinds, cycled.  Defaults by family."""
+        if self.layer_pattern:
+            return self.layer_pattern
+        if self.family in ("ssm",):
+            return ("mamba",)
+        return ("global",)
+
+    def layer_kinds(self, n: Optional[int] = None) -> Tuple[str, ...]:
+        n = n or self.num_layers
+        p = self.pattern
+        return tuple(p[i % len(p)] for i in range(n))
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + trunk), for 6ND roofline math."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        dh, hq, hkv = self.d_head, self.num_heads, self.num_kv_heads
+        attn = d * dh * (hq + 2 * hkv) + hq * dh * d
+        mlp = (3 if self.mlp_gated else 2) * d * f
+        if self.family == "moe":
+            mlp *= self.num_experts
+            mlp += d * self.num_experts  # router
+        if self.family == "ssm" and self.ssm_variant == "mamba1":
+            di, n_, r = self.d_inner, self.ssm_state, self.dt_rank
+            per = d * 2 * di + di * self.ssm_conv + di * (r + 2 * n_) + r * di + di * n_ + 2 * di + di * d
+            return v * d + self.num_layers * per
+        if self.family == "hybrid":
+            di, n_ = self.d_inner, self.ssm_state
+            h = di // self.ssm_head_dim
+            per_m = d * (2 * di + 2 * self.ssm_groups * n_ + h) + di * self.ssm_conv + 2 * h + di + di * d
+            shared = attn + mlp
+            return v * d + self.num_layers * per_m + shared
+        n_layers = self.num_layers or (self.enc_layers + self.dec_layers)
+        per = attn + mlp
+        if self.family == "encdec":
+            per_dec = 2 * attn + mlp  # self + cross
+            return v * d + self.enc_layers * per + self.dec_layers * per_dec
+        return v * d + n_layers * per
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k experts only) for MODEL_FLOPS."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dh, hq, hkv = self.d_head, self.num_heads, self.num_kv_heads
+        attn = d * dh * (hq + 2 * hkv) + hq * dh * d
+        mlp_active = (3 if self.mlp_gated else 2) * d * f * self.experts_per_token
+        return self.vocab_size * d + self.num_layers * (attn + mlp_active + d * self.num_experts)
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test variant: same family & layer pattern, tiny everything."""
+    p = len(cfg.pattern)
+    n_small = max(2 * p, 2)
+    kw = dict(
+        num_layers=min(cfg.num_layers, n_small) or 0,
+        d_model=64, d_ff=128, vocab_size=512,
+        num_heads=4 if cfg.num_heads else 0,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads else 0,
+        head_dim=16 if cfg.num_heads else 0,
+        window=8 if cfg.window else None,
+        max_position=4096,
+        frontend_len=4 if cfg.frontend else 256,
+        block_k=16,
+        ssm_chunk=8,
+    )
+    if cfg.family == "moe":
+        kw.update(num_experts=min(cfg.num_experts, 8),
+                  experts_per_token=min(cfg.experts_per_token, 2))
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_state=min(cfg.ssm_state, 8), ssm_head_dim=16)
+    if cfg.family == "hybrid":
+        kw.update(num_layers=max(cfg.hybrid_period, 2) + 2,
+                  hybrid_period=max(min(cfg.hybrid_period, 2), 2))
+    if cfg.family == "encdec":
+        kw.update(enc_layers=2, dec_layers=2, num_layers=0)
+    if cfg.num_layers and cfg.layer_pattern:
+        kw.update(num_layers=n_small)
+    return cfg.replace(name=cfg.name + "-smoke", **kw)

@@ -1,0 +1,39 @@
+"""BERT-Base / BERT-Large — the paper's own benchmark models (Table III).
+
+Encoder-only, learned positions, post-LN, GELU, MHA.  These drive the
+paper-figure benchmarks (Figs 7-13) and the faithful-reproduction arm of
+EXPERIMENTS.md.  Encoder-only → no decode shapes.
+"""
+from repro.configs.base import ModelConfig
+
+BERT_BASE = ModelConfig(
+    name="bert-base",
+    family="bert",
+    source="[paper Table III]",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=30522,
+    mlp_gated=False,
+    act="gelu",
+    norm="layernorm",
+    postnorm=True,
+    pos_embedding="learned",
+    max_position=8192,
+    attn_bias=True,
+    tie_embeddings=True,
+)
+
+BERT_LARGE = BERT_BASE.replace(
+    name="bert-large",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+)
+
+CONFIG = BERT_BASE

@@ -1,0 +1,23 @@
+"""deepseek-7b — dense llama-architecture LM.
+
+[arXiv:2401.02954; hf]  30L, d_model=4096, 32H (MHA: kv=32), d_ff=11008,
+vocab=102400.  RMSNorm, SiLU-gated MLP, RoPE.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b",
+    family="dense",
+    source="[arXiv:2401.02954; hf]",
+    num_layers=30,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=102400,
+    mlp_gated=True,
+    act="silu",
+    norm="rmsnorm",
+    tie_embeddings=False,
+)

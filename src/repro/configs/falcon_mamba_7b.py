@@ -1,0 +1,26 @@
+"""falcon-mamba-7b — attention-free Mamba-1 LM.
+
+[arXiv:2410.05355; unverified]  64L, d_model=4096, d_inner=8192 (expand 2),
+ssm_state=16, conv 4, dt_rank=256, vocab=65024.  No attention anywhere → the
+HASTILY softmax technique is inapplicable to the mixer (see DESIGN.md
+§Arch-applicability); the SSM recurrence is already an O(l)-memory streaming
+pipeline.  LUT-exp still serves the final vocab softmax.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    source="[arXiv:2410.05355; unverified]",
+    num_layers=64,
+    d_model=4096,
+    d_ff=0,
+    vocab_size=65024,
+    ssm_variant="mamba1",
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_conv=4,
+    norm="rmsnorm",
+    pos_embedding="none",
+    tie_embeddings=False,
+)

@@ -1,0 +1,32 @@
+"""gemma2-9b — dense LM with alternating local:global attention + logit softcaps.
+
+[arXiv:2408.00118; hf]  42L, d_model=3584, 16H (GQA kv=8), head_dim=256,
+d_ff=14336, vocab=256000.  Alternating (local window-4096, global) layers,
+attention-logit softcap 50, final-logit softcap 30, GeGLU MLP, embedding scaled
+by sqrt(d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    source="[arXiv:2408.00118; hf]",
+    num_layers=42,
+    d_model=3584,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab_size=256000,
+    layer_pattern=("local", "global"),
+    window=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    mlp_gated=True,
+    act="gelu",
+    norm="rmsnorm",
+    embed_scale=True,
+    post_block_norm=True,
+    attn_scale=0.0625,       # gemma2-9b query_pre_attn_scalar=256 → 1/sqrt(256)
+    tie_embeddings=True,
+)

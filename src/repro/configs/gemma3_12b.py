@@ -1,0 +1,31 @@
+"""gemma3-12b — dense LM, 5:1 local:global attention, 128k context.
+
+[hf:google/gemma-3-1b-pt; unverified]  48L, d_model=3840, 16H (GQA kv=8),
+head_dim=256, d_ff=15360, vocab=262144.  Five local (window 1024, rope 10k)
+layers per one global (rope 1M) layer; QK-norm instead of logit softcap.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    source="[hf:google/gemma-3-1b-pt; unverified]",
+    num_layers=48,
+    d_model=3840,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    layer_pattern=("local", "local", "local", "local", "local", "global"),
+    window=1024,
+    rope_theta=1_000_000.0,
+    local_rope_theta=10_000.0,
+    qk_norm=True,
+    mlp_gated=True,
+    act="gelu",
+    norm="rmsnorm",
+    embed_scale=True,
+    post_block_norm=True,
+    tie_embeddings=True,
+)

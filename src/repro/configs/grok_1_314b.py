@@ -1,0 +1,27 @@
+"""grok-1-314b — xAI Grok-1 (8 experts, top-2).
+
+[hf:xai-org/grok-1; unverified]  64L, d_model=6144, 48H (GQA kv=8),
+d_ff=32768 per expert, vocab=131072, 8 experts top-2.  Grok uses gelu-gated
+experts and attention-logit soft-capping (30.0).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    source="[hf:xai-org/grok-1; unverified]",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    num_experts=8,
+    experts_per_token=2,
+    mlp_gated=True,
+    act="gelu",
+    norm="rmsnorm",
+    attn_softcap=30.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,29 @@
+"""internvl2-1b — InternViT + Qwen2-0.5B LM backbone.
+
+[arXiv:2404.16821; hf]  LM trunk: 24L, d_model=896, 14H (GQA kv=2), d_ff=4864,
+vocab=151655.  The InternViT vision frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed patch embeddings (B, n_patches, d_model)
+prepended to the token sequence.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    source="[arXiv:2404.16821; hf]",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151655,
+    mlp_gated=True,
+    act="silu",
+    norm="rmsnorm",
+    attn_bias=True,          # Qwen2 uses QKV bias
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    frontend="vision",
+    frontend_len=256,
+)

@@ -1,0 +1,29 @@
+"""seamless-m4t-large-v2 — encoder-decoder multimodal (audio) backbone.
+
+[arXiv:2308.11596; hf]  24L per stack, d_model=1024, 16 heads (MHA: kv=16),
+d_ff=8192, vocab=256206.  The speech frontend (w2v-BERT conformer feature
+extractor) is a STUB per the assignment: ``input_specs()`` provides precomputed
+frame embeddings of shape (B, L_src, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    source="[arXiv:2308.11596; hf]",
+    enc_layers=24,
+    dec_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256206,
+    mlp_gated=False,
+    act="gelu",
+    norm="layernorm",
+    pos_embedding="rope",
+    tie_embeddings=True,
+    frontend="audio",
+    frontend_len=256,
+)

@@ -1,0 +1,26 @@
+"""starcoder2-3b — dense code LM, GQA + RoPE.
+
+[arXiv:2402.19173; hf]  30L, d_model=3072, 24H (GQA kv=2), d_ff=12288,
+vocab=49152.  LayerNorm, non-gated GELU MLP, attention bias — per the
+StarCoder2 reference implementation.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    family="dense",
+    source="[arXiv:2402.19173; hf]",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=49152,
+    mlp_gated=False,
+    act="gelu",
+    norm="layernorm",
+    attn_bias=True,
+    rope_theta=999_999.4,
+    tie_embeddings=True,
+)

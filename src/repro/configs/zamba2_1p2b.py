@@ -1,0 +1,33 @@
+"""zamba2-1.2b — Mamba-2 backbone with shared attention blocks (hybrid).
+
+[arXiv:2411.15242; hf]  38 Mamba-2 blocks, d_model=2048, ssm_state=64; one
+*shared* transformer block (32H MHA kv=32, d_ff=8192) interleaved every
+``hybrid_period`` Mamba blocks (weights reused at every invocation — Zamba2's
+parameter-sharing trick).  The HASTILY softmax technique applies to the shared
+attention blocks; the Mamba-2 chunked scan is attention-free.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    source="[arXiv:2411.15242; hf]",
+    num_layers=38,               # mamba2 blocks
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_variant="mamba2",
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    hybrid_period=6,
+    mlp_gated=True,
+    act="gelu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+)

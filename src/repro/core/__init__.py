@@ -1,0 +1,24 @@
+"""HASTILY core: the paper's contribution as composable JAX modules.
+
+- ``lut_exp`` / ``lut_softmax``: the UCLM 128-entry LUT exponential (paper III-B1).
+- ``streaming_attention``: fine-grained-pipelined attention, O(l) memory (paper IV).
+- ``multicore_softmax`` / ``ring_attention``: multi-chip softmax/attention with
+  tree gathers (paper III-B2) and KV ring streaming.
+- ``quant``: the INT8 substrate (paper V).
+"""
+from repro.core.lut_exp import lut_exp, lut_exp2, make_table, K
+from repro.core.lut_softmax import lut_softmax, lut_log_softmax, softcap
+from repro.core.streaming_attention import streaming_attention, naive_attention
+from repro.core.ring_attention import ring_attention, distributed_decode_attention
+from repro.core.multicore_softmax import (sharded_softmax, sharded_softmax_tree,
+                                          tree_allreduce)
+from repro.core.quant import QTensor, quantize, quantize_dynamic, int8_matmul
+
+__all__ = [
+    "lut_exp", "lut_exp2", "make_table", "K",
+    "lut_softmax", "lut_log_softmax", "softcap",
+    "streaming_attention", "naive_attention",
+    "ring_attention", "distributed_decode_attention",
+    "sharded_softmax", "sharded_softmax_tree", "tree_allreduce",
+    "QTensor", "quantize", "quantize_dynamic", "int8_matmul",
+]

@@ -1,0 +1,53 @@
+"""Numerically-stable softmax built on the HASTILY LUT exponential (paper §III-B).
+
+Implements the paper's five-step softmax (maxima → subtract → exponent → reduce →
+divide) with the exponent supplied by ``lut_exp``.  Supports the attention-side
+extras the assigned architectures need: masking (additive or boolean), gemma-style
+logit soft-capping, and a pluggable exp so the "PUMA baseline" (plain
+``jnp.exp``) and the HASTILY path share one code path for A/B comparisons.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut_exp import lut_exp
+
+ExpFn = Callable[[jax.Array], jax.Array]
+
+NEG_INF = -1e30  # finite mask value: keeps (x - max) well-defined everywhere
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 style logit soft-capping: cap·tanh(x/cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def lut_softmax(x: jax.Array, axis: int = -1, *,
+                where: Optional[jax.Array] = None,
+                exp_fn: ExpFn = lut_exp,
+                cap: Optional[float] = None) -> jax.Array:
+    """softmax(x) with LUT exponent.  ``where`` False positions get probability 0."""
+    x = softcap(x, cap)
+    if where is not None:
+        x = jnp.where(where, x, NEG_INF)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    # Fully-masked rows: max == NEG_INF → shift to 0 to avoid inf - inf.
+    m = jnp.where(m <= NEG_INF, 0.0, m)
+    e = exp_fn(x - m)
+    if where is not None:
+        e = jnp.where(where, e, 0.0)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return e / jnp.maximum(s, 1e-30)
+
+
+def lut_log_softmax(x: jax.Array, axis: int = -1, *,
+                    exp_fn: ExpFn = lut_exp) -> jax.Array:
+    """log-softmax via the LUT sum (paper §VII mentions log-softmax extension)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = exp_fn(x - m)
+    return x - m - jnp.log(jnp.sum(e, axis=axis, keepdims=True))

@@ -1,0 +1,74 @@
+"""INT8 quantisation substrate (paper §V: all HASTILY evaluations are INT8).
+
+The CIM crossbar computes with 8-bit weights/inputs; the TPU analogue is the MXU's
+native int8×int8→int32 path (~2× bf16 throughput on v5e).  We implement symmetric
+quantisation:
+
+* weights — per-output-channel scales (absmax), static;
+* activations — per-tensor dynamic absmax (computed at runtime, like the DAC input
+  range in the paper's crossbar).
+
+``QTensor`` is a pytree so quantised params flow through jit/pjit/shard_map and the
+checkpointing layer unchanged.  The Pallas kernel lives in
+``repro.kernels.int8_matmul``; ``int8_matmul`` below is the pure-jnp path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    """int8 values + float scale. ``scale`` broadcasts against ``values``."""
+    values: jax.Array   # int8
+    scale: jax.Array    # f32
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self) -> jax.Array:
+        return self.values.astype(jnp.float32) * self.scale
+
+
+def quantize(w: jax.Array, axis: int | tuple = -1, *, bits: int = 8) -> QTensor:
+    """Symmetric per-channel quantisation.  ``axis``: reduced (input) dims."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
+def quantize_dynamic(x: jax.Array, *, bits: int = 8) -> QTensor:
+    """Per-tensor dynamic activation quantisation (paper's input DAC range)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
+def int8_matmul(x: jax.Array, wq: QTensor) -> jax.Array:
+    """x (…, K) f32 × wq (K, N) int8 → (…, N) f32.
+
+    Activations are dynamically quantised; the contraction accumulates in int32
+    (the MXU-native path the Pallas kernel targets), then both scales are applied.
+    """
+    xq = quantize_dynamic(x)
+    acc = jax.lax.dot_general(
+        xq.values, wq.values,
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * xq.scale * jnp.squeeze(wq.scale, 0)
+
+
+def dense_maybe_quant(x: jax.Array, w, *, use_int8: bool = False) -> jax.Array:
+    """Single dispatch point used by all model code: f32/bf16 or int8 matmul."""
+    if isinstance(w, QTensor):
+        return int8_matmul(x, w)
+    if use_int8:
+        return int8_matmul(x, quantize(w, axis=0))
+    return jnp.einsum("...k,kn->...n", x, w)

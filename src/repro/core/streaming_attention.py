@@ -1,0 +1,379 @@
+"""Fine-grained-pipelined ("streaming") attention — HASTILY §IV on TPU.
+
+The paper streams one input *row* at a time through ``QKᵀ → softmax → ·V`` so the
+``l×l`` logit matrix never exists (space O(l) instead of O(l²)).  The correctness
+hinge is that softmax max/sum are *associatively combinable* — exactly the paper's
+multi-core partial-max / partial-sum gather (§III-B2).
+
+On TPU, one SRAM row-vector becomes one MXU tile: we stream over **blocks** of the
+KV sequence, carrying the running ``(max m, denominator l, weighted accumulator)``
+online-softmax state.  A custom VJP re-streams the blocks in the backward pass
+(saving only ``out`` and the per-row logsumexp), so *training* is O(l) memory too —
+the jaxpr-level guarantee ``no (Lq, Lkv) tensor exists`` is asserted in tests.
+
+The exponent inside is pluggable: ``exp_mode="lut"`` uses the paper's 128-entry
+LUT decomposition; ``exp_mode="exact"`` is the PUMA/GPU-style baseline.  The Pallas
+TPU kernel version lives in ``repro.kernels.streaming_attention``; this module is
+the pure-jnp implementation used on CPU and for lowering in the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut_exp import lut_exp
+from repro.core.lut_softmax import NEG_INF, softcap
+from repro.parallel.ctx import maybe_shard
+
+_EXP_FNS = {
+    "lut": lambda x: lut_exp(x, order=1),
+    "lut0": lambda x: lut_exp(x, order=0),
+    "exact": jnp.exp,
+}
+
+
+class AttnConfig(NamedTuple):
+    """Static attention configuration (hashable → usable as nondiff argnum)."""
+    scale: float
+    causal: bool = False
+    window: Optional[int] = None       # sliding-window size (local attention)
+    cap: Optional[float] = None        # gemma-2 logit softcap
+    block_k: int = 512                 # KV streaming block (the "pipeline vector")
+    exp_mode: str = "lut"              # lut | lut0 | exact
+
+
+def _split_heads(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, Hq, Lq, D) → (B, Hkv, G, Lq, D) grouped-query layout."""
+    b, hq, lq, d = q.shape
+    assert hq % n_kv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {n_kv}"
+    return q.reshape(b, n_kv, hq // n_kv, lq, d)
+
+
+def _block_mask(cfg: AttnConfig, q_pos: jax.Array, kv_idx: jax.Array,
+                kv_pos: jax.Array, kv_len: jax.Array) -> jax.Array:
+    """Boolean (Bp, 1, 1, Lq, bk) mask for one KV block.
+
+    ``kv_idx`` (bk,) is the *structural* slot index (bounds the valid cache
+    prefix via kv_len); ``kv_pos`` (Bp, bk) is the *absolute position* of each
+    slot — they differ for ring-buffer sliding-window caches, where slot
+    positions wrap (negative = never written).  Bp is 1 (synthetic positions)
+    or B (explicit per-batch ring positions).
+    """
+    qp = q_pos[None, :, None]              # (1, Lq, 1)
+    kp = kv_pos[:, None, :]                # (Bp, 1, bk)
+    m = (kp >= 0) & (kv_idx[None, None, :] < kv_len)
+    if cfg.causal:
+        m &= kp <= qp
+    if cfg.window is not None:
+        m &= (qp - kp) < cfg.window
+    return m[:, None, None]                # (Bp, 1, 1, Lq, bk)
+
+
+def _logits(cfg: AttnConfig, q: jax.Array, k_blk: jax.Array):
+    """Raw and soft-capped logits for one block.  q:(B,Hkv,G,Lq,D) k:(B,Hkv,bk,D)."""
+    s_raw = jnp.einsum("bhgqd,bhkd->bhgqk", q,
+                       k_blk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * cfg.scale
+    return s_raw, softcap(s_raw, cfg.cap)
+
+
+def _blocked_kv(x: jax.Array, block: int):
+    """(B, H, L, D) → (nb, B, H, block, D), padding L up to a block multiple."""
+    b, h, l, d = x.shape
+    nb = -(-l // block)
+    pad = nb * block - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return jnp.moveaxis(x.reshape(b, h, nb, block, d), 2, 0)
+
+
+def _blocked_pos(p: jax.Array, block: int):
+    """(Bp, L) int32 → (nb, Bp, block), padding with -1 (= invalid slot)."""
+    bp, l = p.shape
+    nb = -(-l // block)
+    pad = nb * block - l
+    if pad:
+        p = jnp.pad(p, ((0, 0), (0, pad)), constant_values=-1)
+    return jnp.moveaxis(p.reshape(bp, nb, block), 1, 0)
+
+
+def _attention_fwd_scan(cfg: AttnConfig, q, kb, vb, pb, q_pos, kv_len):
+    """Online-softmax forward.  Returns (out, logsumexp)."""
+    exp_fn = _EXP_FNS[cfg.exp_mode]
+    b, hkv, g, lq, d = q.shape
+    nb, _, _, bk, dv = vb.shape
+
+    def body(carry, blk):
+        m, l, acc = carry
+        j, k_blk, v_blk, p_blk = blk
+        kv_idx = j * bk + jnp.arange(bk)
+        _, s = _logits(cfg, q, k_blk)
+        mask = _block_mask(cfg, q_pos, kv_idx, p_blk, kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = exp_fn(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = exp_fn(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, v_blk, preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, hkv, g, lq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, lq), jnp.float32),
+            jnp.zeros((b, hkv, g, lq, dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (jnp.arange(nb), kb, vb, pb))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _streaming_attention(cfg: AttnConfig, q, k, v, kv_pos, q_pos, kv_len):
+    out, _ = _attention_fwd_scan(cfg, q, _blocked_kv(k, cfg.block_k),
+                                 _blocked_kv(v, cfg.block_k),
+                                 _blocked_pos(kv_pos, cfg.block_k),
+                                 q_pos, kv_len)
+    return out
+
+
+def _fwd(cfg, q, k, v, kv_pos, q_pos, kv_len):
+    kb = _blocked_kv(k, cfg.block_k)
+    vb = _blocked_kv(v, cfg.block_k)
+    pb = _blocked_pos(kv_pos, cfg.block_k)
+    out, lse = _attention_fwd_scan(cfg, q, kb, vb, pb, q_pos, kv_len)
+    return out, (q, k, v, kv_pos, q_pos, kv_len, out, lse)
+
+
+def _bwd(cfg, res, dout):
+    """Flash-style backward: re-stream KV blocks, saving no l×l tensor."""
+    q, k, v, kv_pos, q_pos, kv_len, out, lse = res
+    exp_fn = _EXP_FNS[cfg.exp_mode]
+    kb = _blocked_kv(k, cfg.block_k)
+    vb = _blocked_kv(v, cfg.block_k)
+    pb = _blocked_pos(kv_pos, cfg.block_k)
+    nb, b, hkv, bk, d = kb.shape
+    lkv = k.shape[2]
+    dout = dout.astype(jnp.float32)
+    delta = jnp.sum(dout * out, axis=-1)  # (B,Hkv,G,Lq)
+
+    def body(dq_acc, blk):
+        j, k_blk, v_blk, p_blk = blk
+        kv_idx = j * bk + jnp.arange(bk)
+        s_raw, s_c = _logits(cfg, q, k_blk)
+        mask = _block_mask(cfg, q_pos, kv_idx, p_blk, kv_len)
+        p = exp_fn(jnp.where(mask, s_c, NEG_INF) - lse[..., None])
+        p = jnp.where(mask, p, 0.0)
+        dv_blk = jnp.einsum("bhgqk,bhgqd->bhkd", p, dout,
+                            preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dout, v_blk,
+                        preferred_element_type=jnp.float32)
+        ds_c = p * (dp - delta[..., None])
+        if cfg.cap is not None:
+            ds_raw = ds_c * (1.0 - (s_c / cfg.cap) ** 2)
+        else:
+            ds_raw = ds_c
+        ds_raw = ds_raw * cfg.scale  # d(q·k)
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds_raw, k_blk,
+                                     preferred_element_type=jnp.float32)
+        dk_blk = jnp.einsum("bhgqk,bhgqd->bhkd", ds_raw, q,
+                            preferred_element_type=jnp.float32)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq, (dkb, dvb) = jax.lax.scan(
+        body, jnp.zeros(q.shape, jnp.float32), (jnp.arange(nb), kb, vb, pb))
+
+    def unblock(xb):
+        x = jnp.moveaxis(xb, 0, 2).reshape(b, hkv, nb * bk, -1)
+        return x[:, :, :lkv]
+
+    return (dq.astype(q.dtype), unblock(dkb).astype(k.dtype),
+            unblock(dvb).astype(v.dtype), None, None, None)
+
+
+_streaming_attention.defvjp(_fwd, _bwd)
+
+
+def streaming_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: Optional[float] = None,
+                        causal: bool = False,
+                        window: Optional[int] = None,
+                        cap: Optional[float] = None,
+                        block_k: int = 512,
+                        exp_mode: str = "lut",
+                        q_offset: jax.Array | int = 0,
+                        kv_len: Optional[jax.Array | int] = None,
+                        kv_pos: Optional[jax.Array] = None) -> jax.Array:
+    """HASTILY streaming attention.
+
+    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lkv, D) with Hq % Hkv == 0 (GQA).
+    ``q_offset`` is the absolute position of q[…, 0, :] (decode: cache length);
+    ``kv_len`` masks a partially-filled KV cache.  ``kv_pos`` (B, Lkv) gives
+    explicit absolute positions per KV slot (ring-buffer sliding-window
+    caches; -1 = never written).  Returns (B, Hq, Lq, D).
+    """
+    b, hq, lq, d = q.shape
+    hkv, lkv = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    block_k = min(block_k, max(lkv, 1))
+    cfg = AttnConfig(scale=float(scale), causal=causal, window=window, cap=cap,
+                     block_k=int(block_k), exp_mode=exp_mode)
+    qg = _split_heads(q.astype(jnp.float32), hkv)
+    # Sequence-parallel queries: the (…, Lq, block_k) score tiles are the
+    # dominant attention transient; sharding Lq over the model axis divides
+    # them mesh-wide while KV stays replicated (ring-attention-lite — the
+    # full KV ring is core/ring_attention.py).  No-op without an active mesh.
+    if lq > 1:
+        qg = maybe_shard(qg, ("dp", None, None, "sp", None))
+    q_pos = (jnp.asarray(q_offset, jnp.int32) + jnp.arange(lq, dtype=jnp.int32))
+    kv_len = jnp.asarray(lkv if kv_len is None else kv_len, jnp.int32)
+    if kv_pos is None:
+        kv_pos = jnp.arange(lkv, dtype=jnp.int32)[None, :]
+    # K/V stay in their storage dtype — each block is upcast inside the
+    # scan body; a wholesale f32 cast would materialise a 2× copy of the
+    # entire KV cache (ruinous for 32k-decode).
+    out = _streaming_attention(cfg, qg, k, v,
+                               kv_pos.astype(jnp.int32), q_pos, kv_len)
+    return out.reshape(b, hq, lq, d).astype(q.dtype)
+
+
+def streaming_attention_quantized(q: jax.Array, kq: jax.Array, vq: jax.Array,
+                                  k_scale: jax.Array, v_scale: jax.Array, *,
+                                  scale: Optional[float] = None,
+                                  causal: bool = True,
+                                  window: Optional[int] = None,
+                                  cap: Optional[float] = None,
+                                  block_k: int = 512,
+                                  exp_mode: str = "lut",
+                                  q_offset: jax.Array | int = 0,
+                                  kv_len: Optional[jax.Array | int] = None,
+                                  kv_pos: Optional[jax.Array] = None
+                                  ) -> jax.Array:
+    """Streaming attention over an INT8-quantised KV cache (inference only).
+
+    kq/vq: (B, Hkv, Lkv, D) int8; k_scale/v_scale: (B, Hkv, Lkv) f32
+    per-row scales.  Each KV block is dequantised *inside* the scan body —
+    O(block) f32 transient, while the resident cache stays int8 (2× smaller
+    than bf16, 4× smaller than f32; the paper's INT8 theme applied to the
+    serving-memory bottleneck).  Forward-only: decode/prefill paths don't
+    differentiate through the cache.
+    """
+    b, hq, lq, d = q.shape
+    hkv, lkv = kq.shape[1], kq.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    block_k = min(block_k, max(lkv, 1))
+    cfg = AttnConfig(scale=float(scale), causal=causal, window=window,
+                     cap=cap, block_k=int(block_k), exp_mode=exp_mode)
+    qg = _split_heads(q.astype(jnp.float32), hkv)
+    q_pos = (jnp.asarray(q_offset, jnp.int32)
+             + jnp.arange(lq, dtype=jnp.int32))
+    kv_len = jnp.asarray(lkv if kv_len is None else kv_len, jnp.int32)
+    if kv_pos is None:
+        kv_pos = jnp.arange(lkv, dtype=jnp.int32)[None, :]
+
+    if lq == 1:
+        # Single-token decode: logits are O(L) — skip the block scan (it
+        # costs a collective-permute per block on sharded caches; §Perf).
+        qg2 = qg
+        kf = kq.astype(jnp.float32) * k_scale[..., None]
+        vf = vq.astype(jnp.float32) * v_scale[..., None]
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg2, kf,
+                       preferred_element_type=jnp.float32) * cfg.scale
+        s = softcap(s, cfg.cap)
+        kv_idx = jnp.arange(lkv, dtype=jnp.int32)
+        mask = _block_mask(cfg, q_pos, kv_idx, kv_pos.astype(jnp.int32),
+                           kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.where(m <= NEG_INF, 0.0, m)
+        p = jnp.where(mask, _EXP_FNS[cfg.exp_mode](s - m), 0.0)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf,
+                         preferred_element_type=jnp.float32)
+        denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        return (out / denom).reshape(b, hq, lq, d).astype(q.dtype)
+
+    # Blocks carry int8 values + per-row scales through the scan and are
+    # dequantised inside the body — O(block) f32 transient, int8 resident.
+    kb = _blocked_kv(kq, cfg.block_k)
+    vb = _blocked_kv(vq, cfg.block_k)
+    ksb = _blocked_kv(k_scale[..., None], cfg.block_k)
+    vsb = _blocked_kv(v_scale[..., None], cfg.block_k)
+    pb = _blocked_pos(kv_pos.astype(jnp.int32), cfg.block_k)
+    exp_fn = _EXP_FNS[cfg.exp_mode]
+    nb, _, _, bk, _ = vb.shape
+    g = hq // hkv
+
+    def body(carry, blk):
+        m, l, acc = carry
+        j, k_i8, v_i8, ks, vs, p_blk = blk
+        k_blk = k_i8.astype(jnp.float32) * ks
+        v_blk = v_i8.astype(jnp.float32) * vs
+        kv_idx = j * bk + jnp.arange(bk)
+        _, s = _logits(cfg, qg, k_blk)
+        mask = _block_mask(cfg, q_pos, kv_idx, p_blk, kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask, exp_fn(s - m_new[..., None]), 0.0)
+        alpha = exp_fn(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, v_blk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, hkv, g, lq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, lq), jnp.float32),
+            jnp.zeros((b, hkv, g, lq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (jnp.arange(nb), kb, vb, ksb, vsb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, lq, d).astype(q.dtype)
+
+
+def quantize_kv_rows(x: jax.Array) -> tuple:
+    """(B, H, L, D) float → (int8 values, (B, H, L) f32 per-row scales)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    s = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -128, 127).astype(jnp.int8)
+    return q, s
+
+
+def naive_attention(q, k, v, *, scale=None, causal=False, window=None, cap=None,
+                    exp_mode: str = "exact", q_offset=0, kv_len=None,
+                    kv_pos: Optional[jax.Array] = None):
+    """Materialised-logits baseline (the "PUMA" dataflow): O(l²) memory.
+
+    Used as the correctness oracle and as the paper-baseline arm of every A/B.
+    """
+    from repro.core.lut_softmax import lut_softmax  # local to avoid cycle
+    b, hq, lq, d = q.shape
+    hkv, lkv = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    qg = _split_heads(q.astype(jnp.float32), hkv)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(lq, dtype=jnp.int32)
+    kv_idx = jnp.arange(lkv, dtype=jnp.int32)
+    if kv_pos is None:
+        kv_pos = kv_idx[None, :]
+    kp = kv_pos[:, None, :]                                       # (Bp, 1, Lkv)
+    qp = q_pos[None, :, None]                                     # (1, Lq, 1)
+    mask = (kp >= 0) & (kv_idx[None, None, :]
+                        < jnp.asarray(lkv if kv_len is None else kv_len))
+    if causal:
+        mask = mask & (kp <= qp)
+    if window is not None:
+        mask = mask & ((qp - kp) < window)
+    exp_fn = _EXP_FNS[exp_mode]
+    p = lut_softmax(s, where=mask[:, None, None], exp_fn=exp_fn, cap=cap)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, lq, d).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, TokenPipeline, host_shard
+
+__all__ = ["DataConfig", "TokenPipeline", "host_shard"]

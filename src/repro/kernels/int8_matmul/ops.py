@@ -1,0 +1,55 @@
+"""Jit'd public wrapper for the int8 matmul Pallas kernel.
+
+Quantises the activation dynamically (per-tensor absmax — the paper's DAC
+input range), pads all dims to block multiples, runs the kernel, and strips
+the padding.  Batched leading dims are folded into M.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, quantize_dynamic
+from repro.kernels.int8_matmul.kernel import int8_matmul_2d
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x, m0, m1):
+    p0, p1 = (-x.shape[0]) % m0, (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k",
+                                    "interpret"))
+def int8_matmul(x: jax.Array, wq: QTensor, *, block_m: int = 256,
+                block_n: int = 256, block_k: int = 512,
+                interpret: bool | None = None) -> jax.Array:
+    """x (…, K) float × wq (K, N) int8 QTensor → (…, N) f32."""
+    if interpret is None:
+        interpret = _use_interpret()
+    *lead, kk = x.shape
+    n = wq.values.shape[1]
+    m = 1
+    for s in lead:
+        m *= s
+
+    xq = quantize_dynamic(x)
+    bm = max(8, min(block_m, m))
+    bn = max(128, min(block_n, n))
+    bk = max(128, min(block_k, kk))
+    xp = _pad2(xq.values.reshape(m, kk), bm, bk)
+    wp = _pad2(wq.values, bk, bn)
+    ws = jnp.pad(wq.scale.reshape(1, n), ((0, 0), (0, (-n) % bn)))
+
+    out = int8_matmul_2d(xp, wp, xq.scale.reshape(1, 1), ws,
+                         block_m=bm, block_n=bn, block_k=bk,
+                         interpret=interpret)
+    return out[:m, :n].reshape(*lead, n)

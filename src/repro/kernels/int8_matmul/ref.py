@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the int8 matmul kernel — the core quant path."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.quant import QTensor, int8_matmul as _core_int8_matmul
+
+
+def int8_matmul_ref(x: jax.Array, wq: QTensor) -> jax.Array:
+    """x (…, K) float × wq (K, N) QTensor → (…, N) f32."""
+    return _core_int8_matmul(x, wq)

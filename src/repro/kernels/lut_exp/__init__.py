@@ -1,0 +1,4 @@
+from repro.kernels.lut_exp.ops import lut_exp
+from repro.kernels.lut_exp.ref import lut_exp_ref
+
+__all__ = ["lut_exp", "lut_exp_ref"]

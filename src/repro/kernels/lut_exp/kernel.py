@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the UCLM LUT-exponential (paper §III-A/B).
+
+The paper's UCLM performs the ``2^(d/K)`` table lookup *inside the same SRAM
+array that does the MVMs*.  The TPU-native statement of that property: the
+lookup is executed as a **one-hot × table matmul on the MXU** — the same
+systolic unit that runs the surrounding matrix products — rather than on the
+VPU or via scalar gathers.  K = 128 is exactly one TPU lane width, so the
+table occupies a single (1, 128) VMEM row (one VREG row), mirroring the
+paper's "one table per 64×64 array" layout (Fig. 4a).
+
+Blocking: the input is viewed as (M, 128) lanes; each grid step processes a
+``(block_m, 128)`` VMEM tile.  Per tile the working set is
+
+    x tile          block_m × 128 × 4 B
+    one-hot         (block_m·128) × 128 × 4 B   (MXU operand)
+    table           128 × 4 B
+
+so ``block_m = 256`` keeps the one-hot operand at 16 MiB — fits v5e VMEM
+(~128 KiB x tile + 16 MiB one-hot is too big; we therefore build the one-hot
+in ``sub`` slabs of 8 rows: 8·128×128×4 B = 512 KiB).  The slab loop is a
+``jax.lax.fori_loop`` inside the kernel, so the (M·128)×128 one-hot never
+materialises — the same "never materialise the big intermediate" discipline
+as the streaming-attention kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.lut_exp import K, LN2, LOG2E, UNDERFLOW_X
+
+# Rows of the input tile exponentiated per MXU one-hot matmul.
+SLAB = 8
+
+
+def _pow2_int_f32(n: jax.Array) -> jax.Array:
+    """Exact 2^n by exponent-field construction (kernel-local copy)."""
+    n_i = jnp.clip(n, -127.0, 127.0).astype(jnp.int32)
+    bits = jnp.where(n_i <= -127, 0, (n_i + 127) << 23)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def mxu_table_lookup(d_i: jax.Array, table: jax.Array,
+                     slab: int = SLAB) -> jax.Array:
+    """T[d] for a 2D int32 index block, as one-hot × table MXU matmuls.
+
+    This is the UCLM property: the lookup runs on the matmul fabric.  The
+    one-hot is built ``slab`` rows at a time so it never exceeds
+    slab·cols×K×4 B of VMEM.  Shared by the lut_exp and streaming-attention
+    kernels.
+    """
+    rows, cols = d_i.shape
+    table = table.reshape(K, 1)
+    if rows % slab:
+        slab = 1
+
+    def slab_body(i, looked):
+        d_slab = jax.lax.dynamic_slice(d_i, (i * slab, 0), (slab, cols))
+        flat = d_slab.reshape(slab * cols)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (slab * cols, K), 1)
+        onehot = (flat[:, None] == iota).astype(jnp.float32)
+        vals = jax.lax.dot_general(
+            onehot, table, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(slab, cols)
+        return jax.lax.dynamic_update_slice(looked, vals, (i * slab, 0))
+
+    return jax.lax.fori_loop(
+        0, rows // slab, slab_body, jnp.zeros((rows, cols), jnp.float32))
+
+
+def lut_exp_block(x: jax.Array, table: jax.Array, *, order: int = 1,
+                  slab: int = SLAB) -> jax.Array:
+    """e^x for a 2D f32 block — the kernel-side LUT-exp decomposition."""
+    t = x * LOG2E
+    n = jnp.floor(t)
+    fk = (t - n) * K
+    d = jnp.clip(jnp.floor(fk), 0.0, float(K - 1))
+    r = fk - d
+    looked = mxu_table_lookup(d.astype(jnp.int32), table, slab)
+    corr = 1.0 if order == 0 else 1.0 + r * (LN2 / K)
+    out = _pow2_int_f32(n) * looked * corr
+    return jnp.where(x < UNDERFLOW_X, 0.0, out)
+
+
+def lut_exp_kernel(x_ref, table_ref, o_ref, *, order: int, block_m: int):
+    """One (block_m, K) tile: e^x = 2^n · T[d] · (1 + r·ln2/K)."""
+    x = x_ref[...].astype(jnp.float32)                       # (bm, K)
+    o_ref[...] = lut_exp_block(x, table_ref[...], order=order)
+
+
+@functools.partial(jax.jit, static_argnames=("order", "block_m", "interpret"))
+def lut_exp_2d(x: jax.Array, table: jax.Array, *, order: int = 1,
+               block_m: int = 256, interpret: bool = False) -> jax.Array:
+    """e^x for an (M, 128) f32 array, M a multiple of ``block_m``."""
+    m, k = x.shape
+    assert k == K and m % block_m == 0, (x.shape, block_m)
+    kernel = functools.partial(lut_exp_kernel, order=order, block_m=block_m)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, K), jnp.float32),
+        interpret=interpret,
+    )(x, table.reshape(1, K))

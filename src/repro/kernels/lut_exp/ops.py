@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the lut_exp Pallas kernel.
+
+Handles arbitrary shapes/dtypes: flattens to (M, 128) lanes, pads M to the
+block size, dispatches the kernel (interpret=True off-TPU), and restores the
+original shape/dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut_exp import K, make_table
+from repro.kernels.lut_exp.kernel import lut_exp_2d
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("order", "block_m", "interpret"))
+def lut_exp(x: jax.Array, *, order: int = 1, block_m: int = 256,
+            interpret: bool | None = None) -> jax.Array:
+    """LUT e^x, any shape/dtype, via the Pallas UCLM kernel."""
+    if interpret is None:
+        interpret = _use_interpret()
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // K)
+    rows_pad = -(-rows // block_m) * block_m
+    # Pad with 0 (exp(0)=1; padded lanes are dropped below).
+    flat = jnp.pad(flat, (0, rows_pad * K - n))
+    out = lut_exp_2d(flat.reshape(rows_pad, K), make_table(K),
+                     order=order, block_m=block_m, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the lut_exp kernel — delegates to the shared core math.
+
+A single source of truth (``repro.core.lut_exp``) backs both the model code
+and this oracle, so a kernel↔oracle allclose is also a kernel↔model check.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut_exp import lut_exp as _core_lut_exp
+
+
+def lut_exp_ref(x: jax.Array, *, order: int = 1) -> jax.Array:
+    return _core_lut_exp(x.astype(jnp.float32), order=order)

@@ -1,0 +1,4 @@
+from repro.kernels.streaming_attention.ops import streaming_attention
+from repro.kernels.streaming_attention.ref import attention_ref
+
+__all__ = ["streaming_attention", "attention_ref"]

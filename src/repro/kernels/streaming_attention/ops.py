@@ -1,0 +1,72 @@
+"""Jit'd public wrapper for the streaming-attention Pallas kernel.
+
+Accepts the model-layer layout (B, H, L, D), folds batch×head into the grid
+axis, pads Lq/Lkv up to block multiples (padded kv is masked via ``kv_len``;
+padded q rows are dropped), and picks MXU-aligned default block sizes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut_exp import make_table
+from repro.kernels.streaming_attention.kernel import attention_3d
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if not pad:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "cap", "exp_mode",
+                     "block_q", "block_k", "q_offset", "kv_len", "interpret"))
+def streaming_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: Optional[float] = None, causal: bool = False,
+                        window: Optional[int] = None,
+                        cap: Optional[float] = None, exp_mode: str = "lut",
+                        block_q: int = 512, block_k: int = 512,
+                        q_offset: int = 0, kv_len: Optional[int] = None,
+                        interpret: bool | None = None) -> jax.Array:
+    """HASTILY streaming attention (Pallas kernel path).
+
+    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lkv, D), Hq % Hkv == 0.  ``q_offset``
+    and ``kv_len`` must be static here (serving uses bucketed lengths); the
+    pure-jnp path handles fully dynamic lengths.
+    """
+    if interpret is None:
+        interpret = _use_interpret()
+    b, hq, lq, d = q.shape
+    hkv, lkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    if kv_len is None:
+        kv_len = lkv
+    block_q = max(8, min(block_q, lq))
+    block_k = max(8, min(block_k, lkv))
+
+    qp = _pad_to(q.reshape(b * hq, lq, d), 1, block_q)
+    kp = _pad_to(k.reshape(b * hkv, lkv, d), 1, block_k)
+    vp = _pad_to(v.reshape(b * hkv, lkv, d), 1, block_k)
+
+    out = attention_3d(
+        qp, kp, vp, make_table(),
+        scale=float(scale), causal=causal, window=window, cap=cap,
+        exp_mode=exp_mode, block_q=block_q, block_k=block_k,
+        kv_len=int(kv_len), q_offset=int(q_offset), group=group,
+        interpret=interpret)
+    return out[:, :lq].reshape(b, hq, lq, d)

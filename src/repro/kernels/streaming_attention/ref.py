@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the streaming-attention kernel.
+
+Delegates to the materialised-logits baseline in ``repro.core`` — the same
+function used as the paper-baseline ("PUMA dataflow") arm of the A/Bs — so
+kernel↔oracle agreement also certifies the kernel against the model code.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.streaming_attention import naive_attention
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  scale: Optional[float] = None, causal: bool = False,
+                  window: Optional[int] = None, cap: Optional[float] = None,
+                  exp_mode: str = "lut", q_offset: int = 0,
+                  kv_len: Optional[int] = None) -> jax.Array:
+    """(B, Hq, Lq, D) × (B, Hkv, Lkv, D) → (B, Hq, Lq, D)."""
+    return naive_attention(q, k, v, scale=scale, causal=causal, window=window,
+                           cap=cap, exp_mode=exp_mode, q_offset=q_offset,
+                           kv_len=kv_len)

@@ -1,0 +1,8 @@
+"""Launch layer: production mesh, multi-pod dry-run, train/serve CLIs.
+
+NOTE: do not import ``repro.launch.dryrun`` from library code — it sets
+XLA_FLAGS at import (placeholder devices) and must only run as __main__.
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

@@ -1,0 +1,342 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers the real step
+function (train / prefill / decode) against ShapeDtypeStruct inputs with
+explicit in/out shardings, compiles, and records
+
+    memory_analysis()   → per-device bytes (fits-in-HBM proof)
+    cost_analysis()     → FLOPs / bytes for §Roofline
+    HLO collectives     → collective bytes (launch/hlo_analysis.py)
+
+into ``results/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+# The placeholder-device flag MUST precede any jax import (device count is
+# locked at first init).  Do not move; do not set globally.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+os.environ.setdefault("REPRO_TARGET_TPU", "1")   # lower MXU-native bf16 dots
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ASSIGNED, cell_status, get_config
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import hlo_totals
+from repro.models import build_model, input_specs
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.parallel import (activation_sharding, batch_specs, cache_specs,
+                            cache_specs_decode, param_specs)
+from repro.parallel.ctx import maybe_shard
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# v5e hardware constants (per chip) — §Roofline.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+HBM_BYTES = 16 * 2 ** 30
+
+
+def _ns(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_specs(pspecs: Any) -> Any:
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), m=pspecs, v=pspecs)
+
+
+def build_cell(cfg: ModelConfig, kind: str, seq: int, batch: int,
+               mesh: Mesh) -> Tuple[Any, tuple, dict]:
+    """→ (jitted fn, arg SDS tuple, metadata)."""
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_sds, mesh)
+    specs_in = input_specs(cfg, kind, seq, batch)
+
+    if kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype="bfloat16")
+        opt_sds = jax.eval_shape(functools.partial(adamw_init, cfg=opt_cfg),
+                                 params_sds)
+        ospecs = _opt_specs(pspecs)
+        bspecs = batch_specs(specs_in["batch"], mesh)
+        # Production memory policy for the biggest models: microbatch the
+        # step down to 1 row/chip and accumulate gradients in bf16; stream
+        # the optimizer update over the stacked-period axis (DESIGN.md §4).
+        # Tiered microbatching (production default; §Perf): ≥50B params →
+        # 1 row/chip + bf16 accumulation; ≥2B → 4 microbatches; small → none.
+        n_params = cfg.param_count()
+        dp = mesh.size // mesh.shape["model"]
+        if n_params > 50e9:
+            micro = max(1, min(16, batch // dp))
+            accum = "bfloat16"
+        elif n_params > 2e9:
+            micro = min(4, max(1, batch // dp))
+            accum = "float32"
+        else:
+            micro, accum = 1, "float32"
+        # hillclimb override (EXPERIMENTS.md §Perf): force a microbatch count
+        env_micro = int(os.environ.get("REPRO_TRAIN_MICRO", "0"))
+        if env_micro:
+            micro = env_micro
+            accum = os.environ.get("REPRO_TRAIN_ACCUM", accum)
+
+        def train_step(params, opt_state, batch):
+            from repro.optim import accumulated_grads
+            loss, grads, _ = accumulated_grads(
+                lambda p, b: model.loss(p, b), params, batch, micro,
+                accum_dtype=accum)
+            # NOTE: scan-streaming the optimizer over the period axis was
+            # measured and REJECTED — it breaks donation aliasing (peak
+            # 36.8 vs 20.4 GiB on grok; EXPERIMENTS.md §Perf).
+            new_p, new_o, _ = adamw_update(grads, opt_state, params, opt_cfg)
+            return new_p, new_o, loss
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                          _ns(mesh, bspecs)),
+            out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, specs_in["batch"])
+
+    elif kind == "prefill":
+        bspecs = batch_specs(specs_in["batch"], mesh)
+        cspecs = cache_specs(specs_in["caches"], mesh)
+
+        def prefill_step(params, batch, caches):
+            return model.prefill(params, batch, caches)
+
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs),
+                          _ns(mesh, cspecs)),
+            out_shardings=None,
+            donate_argnums=(2,))
+        args = (params_sds, specs_in["batch"], specs_in["caches"])
+
+    elif kind == "decode":
+        # sequence-sharded KV at decode: the paper's Fig-5 gather (§Perf)
+        cspecs = cache_specs_decode(specs_in["state"], mesh)
+        tok_spec = batch_specs({"t": specs_in["token"]}, mesh)["t"]
+
+        def serve_step(params, token, state, index):
+            return model.decode_step(params, token, state, index)
+
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(_ns(mesh, pspecs), NamedSharding(mesh, tok_spec),
+                          _ns(mesh, cspecs), NamedSharding(mesh, P())),
+            out_shardings=(None, _ns(mesh, cspecs)),
+            donate_argnums=(2,))
+        args = (params_sds, specs_in["token"], specs_in["state"],
+                specs_in["index"])
+    else:
+        raise ValueError(kind)
+
+    return fn, args, {"kind": kind}
+
+
+def _trip_hints(cfg: ModelConfig, kind: str, seq: int) -> list:
+    """While-loop trip multipliers by nesting depth (layer scan, then the
+    longest plausible inner scan: KV-block stream or SSM chunk scan)."""
+    from repro.models.lm import period_layout
+    try:
+        _, nper, _ = period_layout(cfg)
+    except Exception:
+        nper = max(cfg.num_layers, 1)
+    nper = max(nper, 1)
+    inner = max(seq // max(cfg.block_k, 1),
+                seq // max(cfg.ssm_chunk, 1) if cfg.ssm_state else 0, 1)
+    return [nper, inner]
+
+
+def model_flops(cfg: ModelConfig, kind: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (fwd), N = active params."""
+    n = cfg.active_param_count()
+    d = batch * (seq if kind in ("train", "prefill") else 1)
+    return (6.0 if kind == "train" else 2.0) * n * d
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             out_dir: str = RESULTS_DIR,
+             kv_quant: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if kv_quant:
+        cfg = cfg.replace(kv_quant=True)
+    seq, batch, kind = SHAPES[shape]
+    mesh_name = ("multipod" if multi_pod else "singlepod")
+    if kv_quant:
+        mesh_name += "-kvq"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+
+    fn, args, _ = build_cell(cfg, kind, seq, batch, mesh)
+    with activation_sharding(mesh):
+        lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    trips = _trip_hints(cfg, kind, seq)
+    coll = hlo_totals(hlo, trips)
+    raw = hlo_totals(hlo, None)
+
+    # cost_analysis visits while bodies ONCE → undercounts a scan-over-layers
+    # program by ~trip_count.  The HLO dot-FLOP count (loop-scaled) is the
+    # primary compute figure; cost_analysis bytes are scaled by the same
+    # loop factor (approximation: loop bodies dominate both).
+    flops_dev = float(coll.pop("flops", 0.0))
+    flops_raw = max(raw.get("flops", 0.0), 1.0)
+    loop_factor = max(flops_dev / flops_raw, 1.0)
+    cost_flops = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0)) * loop_factor
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "kind": kind,
+        "seq": seq, "global_batch": batch, "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            # donated args alias outputs (train/prefill/decode all donate
+            # their state), so live peak = max(args, outputs) + temps
+            "peak_bytes": (max(getattr(mem, "argument_size_in_bytes", 0),
+                               getattr(mem, "output_size_in_bytes", 0))
+                           + getattr(mem, "temp_size_in_bytes", 0)),
+            "hbm_limit": HBM_BYTES,
+            "fits": (max(getattr(mem, "argument_size_in_bytes", 0),
+                         getattr(mem, "output_size_in_bytes", 0))
+                     + getattr(mem, "temp_size_in_bytes", 0)) <= HBM_BYTES,
+        },
+        "cost": {"flops_per_device": flops_dev,
+                 "bytes_per_device": bytes_dev,
+                 "xla_cost_flops_raw": cost_flops,
+                 "loop_factor": loop_factor},
+        "collectives": coll,
+        "roofline": {},
+    }
+    # §Roofline terms (cost_analysis is per-device post-partitioning).
+    # bytes_dev is op-level (unfused) byte counting — an UPPER bound on HBM
+    # traffic; the live-buffer peak is the fused lower bound.  True traffic
+    # sits between; both are recorded.
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    peak_live = (max(getattr(mem, "argument_size_in_bytes", 0),
+                     getattr(mem, "output_size_in_bytes", 0))
+                 + getattr(mem, "temp_size_in_bytes", 0))
+    t_memory_lb = peak_live / HBM_BW
+    t_coll = coll.get("total_operand_bytes", 0.0) / chips / ICI_BW
+    t_wire = coll.get("total_wire_bytes", 0.0) / chips / ICI_BW
+    mf = model_flops(cfg, kind, seq, batch)
+    dom = max((("compute", t_compute), ("memory", t_memory),
+               ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    result["roofline"] = {
+        "compute_s": t_compute, "memory_s": t_memory,
+        "memory_lb_s": t_memory_lb,
+        "collective_s": t_coll, "collective_wire_s": t_wire,
+        "dominant": dom,
+        "model_flops": mf,
+        "model_flops_per_device": mf / chips,
+        "useful_flop_ratio": (mf / chips / flops_dev) if flops_dev else None,
+    }
+    _write(out_dir, arch, shape, mesh_name, result)
+    return result
+
+
+def _write(out_dir: str, arch: str, shape: str, mesh_name: str,
+           result: Dict[str, Any]) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def cell_path(out_dir: str, arch: str, shape: str, mesh_name: str) -> str:
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV caches (hillclimb arm; writes *-kvq cells)")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    cells = []
+    archs = ASSIGNED if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        mesh_name = ("multipod" if mp else "singlepod") + (
+            "-kvq" if args.kv_quant else "")
+        status = cell_status(a, s)
+        path = cell_path(args.out, a, s, mesh_name)
+        if status.startswith("skip"):
+            _write(args.out, a, s, mesh_name,
+                   {"arch": a, "shape": s, "mesh": mesh_name,
+                    "status": status})
+            print(f"[skip] {a} × {s} × {mesh_name}: {status}")
+            continue
+        if os.path.exists(path) and not args.force:
+            with open(path) as f:
+                if json.load(f).get("status") == "ok":
+                    print(f"[cached] {a} × {s} × {mesh_name}")
+                    continue
+        try:
+            r = run_cell(a, s, mp, args.out,
+                         kv_quant=args.kv_quant)
+            peak = r["memory"]["peak_bytes"] or 0
+            fits = "" if r["memory"]["fits"] else "  ** OVER HBM **"
+            print(f"[ok] {a} × {s} × {mesh_name}: "
+                  f"peak {peak/2**30:.2f} GiB/dev, "
+                  f"dominant={r['roofline']['dominant']}, "
+                  f"compile {r['compile_s']:.0f}s{fits}", flush=True)
+        except Exception as e:
+            failures += 1
+            _write(args.out, a, s, mesh_name,
+                   {"arch": a, "shape": s, "mesh": mesh_name,
+                    "status": "error", "error": repr(e),
+                    "traceback": traceback.format_exc()})
+            print(f"[FAIL] {a} × {s} × {mesh_name}: {e!r}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,246 @@
+"""HLO-text analysis: collective traffic and FLOP accounting for §Roofline.
+
+Two gaps in ``compiled.cost_analysis()`` force text analysis:
+
+1. it has no collective-bytes concept at all;
+2. it visits each ``while`` body ONCE — a scan-over-layers program reports
+   ~1/trip_count of its real FLOPs/bytes (measured 400× low on grok-1).
+
+So we parse the post-optimisation HLO:
+
+- build a module-wide symbol table (instruction name → result shape) —
+  post-opt HLO prints operand *names* without inline shapes;
+- per computation, sum collective operand bytes (all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute) and matmul FLOPs
+  (``dot`` instructions: 2 · result_elems · contraction size);
+- walk the call graph; a ``while`` body's totals are multiplied by a trip
+  count.  Trip counts aren't printed in HLO, but the framework knows its
+  loop nest (layer scan = #periods, chunk scans = L/chunk, microbatches) —
+  the caller passes ``trip_hints`` by nesting depth.
+
+Wire bytes use standard ring-algorithm factors:
+
+    all-reduce       2·(n−1)/n · operand bytes
+    all-gather       (n−1)/n · result bytes
+    reduce-scatter   (n−1)/n · operand bytes
+    all-to-all       (n−1)/n · operand bytes
+    collective-permute   1 · operand bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+          "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
+          "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5,
+          "u4": 0.5}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_WHILE_RE = re.compile(r"while\(.*?\).*?body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_DOT_RE = re.compile(r"=\s*(.+?)\s+dot\(")
+_LHS_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def shape_bytes(shape_str: str) -> float:
+    """Total bytes of a possibly-tuple HLO shape string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dtype]
+    return total
+
+
+def shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _shape_elems(shape_str: str) -> float:
+    n = 1.0
+    for d in shape_dims(shape_str):
+        n *= d
+    return n
+
+
+def _args_of(line: str, start: int) -> List[str]:
+    """Split the operand list starting right after '(' at ``start``."""
+    depth, i, buf, out = 1, start, [], []
+    while i < len(line) and depth:
+        ch = line[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            out.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+        i += 1
+    if buf:
+        out.append("".join(buf))
+    return [a.strip() for a in out]
+
+
+def _operand_bytes(arg: str, defs: Dict[str, str]) -> float:
+    if "[" in arg:                       # inline shape (pre-opt HLO)
+        return shape_bytes(arg)
+    name = arg.lstrip("%")
+    return shape_bytes(defs.get(name, ""))
+
+
+def _operand_shape(arg: str, defs: Dict[str, str]) -> str:
+    if "[" in arg:
+        return arg
+    return defs.get(arg.lstrip("%"), "")
+
+
+def parse_defs(hlo: str) -> Dict[str, str]:
+    defs: Dict[str, str] = {}
+    for line in hlo.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            defs[m.group(1)] = m.group(2)
+    return defs
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    name: Optional[str] = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            name = m.group(1)
+            comps[name] = []
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = comps[name]
+            continue
+        if name is not None:
+            comps[name].append(line)
+            if line.strip() == "}":
+                name = None
+    return comps
+
+
+def _totals_of(lines: List[str], defs: Dict[str, str]) -> Dict[str, float]:
+    """Collective bytes + dot FLOPs for one computation body (no callees)."""
+    out = {f"op_{k}": 0.0 for k in _COLLECTIVES}
+    out.update({f"wire_{k}": 0.0 for k in _COLLECTIVES})
+    out["flops"] = 0.0
+    for line in lines:
+        mc = _COLL_RE.search(line)
+        if mc:
+            result_shape, kind = mc.group(1), mc.group(2)
+            args = _args_of(line, mc.end())
+            operand_bytes = sum(_operand_bytes(a, defs) for a in args
+                                if a and not a[0].isdigit())
+            result_bytes = shape_bytes(result_shape)
+            gm = _GROUPS_RE.search(line)
+            n = max(len(gm.group(1).split(",")) if gm else 2, 2)
+            out[f"op_{kind}"] += operand_bytes
+            if kind == "all-reduce":
+                out[f"wire_{kind}"] += 2.0 * (n - 1) / n * operand_bytes
+            elif kind == "all-gather":
+                out[f"wire_{kind}"] += (n - 1) / n * result_bytes
+            elif kind in ("reduce-scatter", "all-to-all"):
+                out[f"wire_{kind}"] += (n - 1) / n * operand_bytes
+            else:
+                out[f"wire_{kind}"] += operand_bytes
+            continue
+        md = _DOT_RE.search(line)
+        if md:
+            result_elems = _shape_elems(md.group(1))
+            args = _args_of(line, md.end())
+            lhs_shape = _operand_shape(args[0], defs) if args else ""
+            dims = shape_dims(lhs_shape)
+            ml = _LHS_DIMS_RE.search(line)
+            k = 1.0
+            if ml and dims:
+                for ix in ml.group(1).split(","):
+                    if ix and int(ix) < len(dims):
+                        k *= dims[int(ix)]
+            out["flops"] += 2.0 * result_elems * k
+    return out
+
+
+def _while_bodies(lines: List[str]) -> List[str]:
+    return [m.group(1) for line in lines
+            for m in [_WHILE_RE.search(line)] if m]
+
+
+def _callees(lines: List[str]) -> List[str]:
+    out = []
+    for line in lines:
+        if "while(" in line:
+            continue        # while bodies handled with trip multipliers
+        out.extend(_CALL_RE.findall(line))
+    return out
+
+
+def hlo_totals(hlo: str, trip_hints: Optional[List[int]] = None
+               ) -> Dict[str, float]:
+    """Whole-program collective bytes + matmul FLOPs.
+
+    trip_hints[d] multiplies totals inside while loops at nesting depth d
+    (0 = outermost).  Missing depths default to 1."""
+    comps = _split_computations(hlo)
+    if "__entry__" not in comps:
+        return {}
+    defs = parse_defs(hlo)
+    hints = trip_hints or []
+
+    def hint(depth: int) -> int:
+        return hints[depth] if depth < len(hints) else 1
+
+    stack: set = set()
+
+    def walk(name: str, depth: int) -> Dict[str, float]:
+        if name not in comps or name in stack:
+            return {}
+        stack.add(name)
+        lines = comps[name]
+        total = _totals_of(lines, defs)
+        for callee in _callees(lines):
+            for k, v in walk(callee, depth).items():
+                total[k] = total.get(k, 0.0) + v
+        for body in _while_bodies(lines):
+            mult = hint(depth)
+            for k, v in walk(body, depth + 1).items():
+                total[k] = total.get(k, 0.0) + v * mult
+        stack.discard(name)
+        return total
+
+    totals = walk("__entry__", 0)
+    totals["total_operand_bytes"] = sum(
+        v for k, v in totals.items() if k.startswith("op_"))
+    totals["total_wire_bytes"] = sum(
+        v for k, v in totals.items() if k.startswith("wire_"))
+    return totals
+
+
+# Backwards-compatible name (collective-only view).
+def collective_totals(hlo: str, trip_hints: Optional[List[int]] = None
+                      ) -> Dict[str, float]:
+    return hlo_totals(hlo, trip_hints)

@@ -1,0 +1,58 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Single-process entry point; on a real cluster each host runs this with
+``jax.distributed.initialize()`` (flag --distributed) and the same config —
+the deterministic data pipeline hands every host its shard by
+(step, host_id), so no coordinator is needed (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.runtime import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="config id; append -smoke for the reduced variant")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--corpus", default="lm", choices=["lm", "copy", "uniform"])
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard over all local devices")
+    ap.add_argument("--distributed", action="store_true")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch, corpus=args.corpus)
+    tcfg = TrainConfig(steps=args.steps, lr=args.lr,
+                       microbatches=args.microbatches,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                       compress_grads=args.compress_grads)
+    mesh = make_host_mesh() if args.mesh else None
+    trainer = Trainer(cfg, dcfg, tcfg, mesh=mesh)
+    metrics = trainer.run()
+    for m in metrics[:: max(len(metrics) // 20, 1)]:
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"lr {m['lr']:.2e}  {m['ms']:.0f} ms")
+    print(f"final loss: {metrics[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

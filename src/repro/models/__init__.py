@@ -1,0 +1,10 @@
+"""Model zoo: every assigned architecture family, pure functional JAX.
+
+``build_model(cfg)`` returns the uniform init/loss/prefill/decode API used by
+the launcher, trainer, serving engine, and dry-run (see ``models.api``).
+"""
+from repro.models.api import (Model, batch_specs, build_model, cache_specs,
+                              init_params, input_specs)
+
+__all__ = ["Model", "build_model", "init_params", "input_specs",
+           "batch_specs", "cache_specs"]

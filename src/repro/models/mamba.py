@@ -1,0 +1,169 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+The recurrence ``h_t = Ā_t h_{t-1} + B̄_t x_t`` *is* the limit case of
+HASTILY's fine-grained pipeline: O(1) state streamed over the sequence, no
+quadratic intermediate by construction (DESIGN.md §6).  We implement it with
+the same associative-combine machinery that legalises the paper's online
+softmax: pairs ``(a, b)`` combine as ``(a₂a₁, a₂b₁ + b₂)`` under
+``jax.lax.associative_scan``, chunked over the sequence so the materialised
+state is O(chunk · d_inner · n) instead of O(L · d_inner · n).
+
+The discretisation ``Ā = exp(Δ ⊗ A)`` uses the HASTILY LUT exponential
+(``cfg.exp_mode``) — the technique's non-attention reuse point.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.streaming_attention import _EXP_FNS
+from repro.models.layers import _dtype, dense_init, dense_apply
+from repro.parallel.ctx import maybe_shard
+
+Params = Dict[str, Any]
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    # S4D-real initialisation: A_log = log(1..n) per channel.
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], di, r + 2 * n, dtype=dt),
+        "dt_proj": dense_init(ks[3], r, di, dtype=dt, scale=r ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))).astype(dt),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype=dt),
+    }
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def _chunked_ssm(exp_fn, a, dt_proj, dt_bias, dt_low, bmat, cmat, xf, h0,
+                 chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective scan with *per-chunk* discretisation.
+
+    The (B, L, di, n) tensors ``Ā = exp(Δ⊗A)`` and ``B̄x`` are never
+    materialised over the full L — each chunk computes its own inside the
+    scan body (O(chunk·di·n) transient instead of O(L·di·n); the same
+    never-materialise discipline as the streaming-attention kernel).
+
+    dt_low: (B, L, r); bmat/cmat: (B, L, n); xf: (B, L, di) f32;
+    a: (di, n) < 0; h0: (B, di, n).  Returns (y (B, L, di), h_last).
+    """
+    b, l, r = dt_low.shape
+    di, n = a.shape
+    pad = (-l) % chunk
+    if pad:
+        dt_low = jnp.pad(dt_low, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+    nc = (l + pad) // chunk
+    # Padded steps must be the identity element (aa=1, bx=0) so h_last — the
+    # streaming carry — is untouched by padding.
+    valid = (jnp.arange(nc * chunk) < l).reshape(nc, chunk)
+
+    def cview(t):
+        return jnp.moveaxis(t.reshape((b, nc, chunk) + t.shape[2:]), 1, 0)
+
+    xs = (cview(dt_low), cview(bmat), cview(cmat), cview(xf), valid)
+
+    def body(h, inp):
+        dtl_c, b_c, c_c, x_c, v_c = inp                           # (B, ch, ·)
+        dt = jax.nn.softplus(
+            dense_apply(dt_proj, dtl_c).astype(jnp.float32)
+            + dt_bias.astype(jnp.float32))                        # (B, ch, di)
+        v = v_c[None, :, None, None]
+        aa = jnp.where(v, exp_fn(dt[..., None] * a[None, None]), 1.0)
+        bx = jnp.where(v, (dt * x_c)[..., None] * b_c[:, :, None, :], 0.0)
+        a_cum, b_cum = jax.lax.associative_scan(_combine, (aa, bx), axis=1)
+        h_all = a_cum * h[:, None] + b_cum                        # (B,ch,di,n)
+        y_c = jnp.einsum("bldn,bln->bld", h_all, c_c)
+        return h_all[:, -1], y_c
+
+    # Without the inner checkpoint, the scan's backward saves each chunk's
+    # (B, chunk, di, n) intermediates for ALL chunks at once (tens of GiB at
+    # 7B/4k) — remat trades that for one recompute per chunk.
+    h_last, ys = jax.lax.scan(jax.checkpoint(body), h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, di)
+    return y[:, :l], h_last
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x: (B, L, di); w: (K, di).  ``state`` is the
+    trailing K-1 inputs from the previous call (decode).  Returns (y, new state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y + b.astype(x.dtype), new_state
+
+
+def mamba_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
+                cache: Optional[Params] = None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """x: (B, L, D) → (B, L, D).  ``cache``: {"conv", "h"} streaming state."""
+    exp_fn = _EXP_FNS[cfg.exp_mode]
+    b, l, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = dense_apply(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # d_inner is elementwise through the whole recurrence — shard it over
+    # the model axis so the (B, chunk, di, n) scan tensors divide mesh-wide.
+    xs = maybe_shard(xs, ("dp", None, "tp"))
+    z = maybe_shard(z, ("dp", None, "tp"))
+    xs, conv_state = _causal_conv(xs, p["conv_w"], p["conv_b"],
+                                  cache["conv"] if cache else None)
+    xs = jax.nn.silu(xs)
+
+    proj = dense_apply(p["x_proj"], xs).astype(jnp.float32)
+    dt_low, bmat, cmat = jnp.split(proj, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
+    a = -jnp.exp(p["A_log"])                                      # (di, n) < 0
+    xf = xs.astype(jnp.float32)
+
+    h0 = (cache["h"].astype(jnp.float32) if cache
+          else jnp.zeros((b, di, n), jnp.float32))
+    if l == 1:  # decode fast path: one recurrence step, no scan
+        dt = jax.nn.softplus(
+            dense_apply(p["dt_proj"], dt_low.astype(x.dtype)
+                        ).astype(jnp.float32)
+            + p["dt_bias"].astype(jnp.float32))                   # (B, 1, di)
+        aa = exp_fn(dt[..., None] * a[None, None])
+        bx = (dt * xf)[..., None] * bmat[:, :, None, :]
+        h_last = aa[:, 0] * h0 + bx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h_last, cmat[:, 0])[:, None]
+    else:
+        y, h_last = _chunked_ssm(exp_fn, a, p["dt_proj"], p["dt_bias"],
+                                 dt_low.astype(x.dtype), bmat, cmat, xf, h0,
+                                 cfg.ssm_chunk)
+    y = y + p["D"] * xf
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = dense_apply(p["out_proj"], y)
+    new_cache = ({"conv": conv_state, "h": h_last.astype(jnp.float32)}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int) -> Params:
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                              _dtype(cfg)),
+            "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)}

@@ -1,0 +1,168 @@
+"""Mamba-2 (SSD) block — the state-mixer of zamba2-1.2b.
+
+Mamba-2 restricts the decay to a *scalar per head*, which turns the chunked
+recurrence into the "state-space dual" matrix form: within a chunk it is an
+attention-like masked matmul C·(decay mask)·Bᵀ·X — i.e. *exactly* the
+structure HASTILY pipelines (logits → weighting → value matmul) with the
+softmax replaced by a decay kernel — and across chunks it is the same
+associative state carry as Mamba-1.  All decay exponentials go through the
+HASTILY LUT exp (inputs are ≤ 0, the LUT's accurate range).
+
+Shapes: heads H = d_inner / ssm_head_dim (P), state N = ssm_state,
+groups G (B/C shared across H/G heads, GQA-style).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.streaming_attention import _EXP_FNS
+from repro.models.layers import _dtype, dense_init, dense_apply
+from repro.parallel.ctx import maybe_shard
+
+Params = Dict[str, Any]
+
+
+def mamba2_heads(cfg: ModelConfig) -> int:
+    return cfg.d_inner // cfg.ssm_head_dim
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Params:
+    d, di, n, g = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    h = mamba2_heads(cfg)
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * g * n + h, dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di + 2 * g * n),
+                                     jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((di + 2 * g * n,), dt),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dt),     # gated RMSNorm before out_proj
+        "out_proj": dense_init(ks[2], di, d, dtype=dt),
+    }
+
+
+def _gated_rmsnorm(scale: jax.Array, y: jax.Array, z: jax.Array) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    return y * (1.0 + scale.astype(jnp.float32))
+
+
+def _ssd_chunked(exp_fn, log_a, bmat, cmat, xdt, s0, chunk: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  log_a: (B,L,H) ≤ 0; bmat/cmat: (B,L,H,N); xdt: (B,L,H,P);
+    s0: (B,H,N,P).  Returns (y (B,L,H,P), final state)."""
+    b, l, h = log_a.shape
+    n, p = bmat.shape[-1], xdt.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (l + pad) // chunk
+
+    def cview(t, extra):  # (B, L, ...) → (nc, B, chunk, ...)
+        return t.reshape((b, nc, chunk) + extra).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(extra))))
+
+    log_a = cview(log_a, (h,))
+    bmat, cmat = cview(bmat, (h, n)), cview(cmat, (h, n))
+    xdt = cview(xdt, (h, p))
+
+    def body(s, inputs):
+        la, bc, cc, xc = inputs                  # (B, chunk, H, ...)
+        s_cum = jnp.cumsum(la, axis=1)           # (B, chunk, H) cumulative log-decay
+        # intra-chunk: G_ij = (C_i·B_j)·exp(s_i − s_j) for j ≤ i
+        scores = jnp.einsum("bihn,bjhn->bhij", cc, bc,
+                            preferred_element_type=jnp.float32)
+        decay = s_cum[:, :, None] - s_cum[:, None, :]       # (B, i, j, H)
+        decay = jnp.transpose(decay, (0, 3, 1, 2))
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        gmat = jnp.where(causal, scores * exp_fn(jnp.minimum(decay, 0.0)), 0.0)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", gmat, xc,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bihn,bhnp->bihp", cc * exp_fn(s_cum)[..., None], s,
+                             preferred_element_type=jnp.float32)
+        # state update: S' = exp(Σ la)·S + Σ_j exp(s_end − s_j) B_j xdt_jᵀ
+        tail = exp_fn(s_cum[:, -1:] - s_cum)                # (B, chunk, H)
+        s_new = (exp_fn(s_cum[:, -1])[..., None, None] * s
+                 + jnp.einsum("bjhn,bjhp->bhnp", bc * tail[..., None], xc,
+                              preferred_element_type=jnp.float32))
+        return s_new, y_intra + y_inter
+
+    # Inner remat: see mamba.py — keeps the backward from saving every
+    # chunk's (B, chunk, chunk, H) score tensors simultaneously.
+    s_last, y = jax.lax.scan(jax.checkpoint(body), s0,
+                             (log_a, bmat, cmat, xdt))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, p)
+    return y[:, :l], s_last
+
+
+def mamba2_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
+                 cache: Optional[Params] = None
+                 ) -> Tuple[jax.Array, Optional[Params]]:
+    """x: (B, L, D) → (B, L, D).  cache: {"conv", "S"}."""
+    from repro.models.mamba import _causal_conv  # shared depthwise conv
+    exp_fn = _EXP_FNS[cfg.exp_mode]
+    b, l, _ = x.shape
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    h, pdim = mamba2_heads(cfg), cfg.ssm_head_dim
+
+    zxbcdt = dense_apply(p["in_proj"], x)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   cache["conv"] if cache else None)
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                          # (B,L,H)
+    a = -jnp.exp(p["A_log"])                                      # (H,) < 0
+    log_a = dt * a[None, None]                                    # (B,L,H) ≤ 0
+
+    # SSD heads are independent — shard them over the model axis so the
+    # per-chunk (B, chunk, chunk, H) score tensors divide mesh-wide.
+    xh = maybe_shard(xs.astype(jnp.float32).reshape(b, l, h, pdim),
+                     ("dp", None, "tp", None))
+    xdt = xh * dt[..., None]
+    rep = h // g
+    bh = maybe_shard(jnp.repeat(bmat.astype(jnp.float32).reshape(b, l, g, n),
+                                rep, axis=2), ("dp", None, "tp", None))
+    ch = maybe_shard(jnp.repeat(cmat.astype(jnp.float32).reshape(b, l, g, n),
+                                rep, axis=2), ("dp", None, "tp", None))
+
+    s0 = (cache["S"].astype(jnp.float32) if cache
+          else jnp.zeros((b, h, n, pdim), jnp.float32))
+    if l == 1:  # decode: single recurrence step
+        a_step = exp_fn(log_a[:, 0])                              # (B,H)
+        s_last = (a_step[..., None, None] * s0
+                  + jnp.einsum("bhn,bhp->bhnp", bh[:, 0], xdt[:, 0]))
+        y = jnp.einsum("bhn,bhnp->bhp", ch[:, 0], s_last)[:, None]
+    else:
+        y, s_last = _ssd_chunked(exp_fn, log_a, bh, ch, xdt, s0, cfg.ssm_chunk)
+
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, l, di)
+    y = _gated_rmsnorm(p["norm_scale"], y, z).astype(x.dtype)
+    out = dense_apply(p["out_proj"], y)
+    new_cache = ({"conv": conv_state, "S": s_last.astype(jnp.float32)}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int) -> Params:
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * g * n),
+                              _dtype(cfg)),
+            "S": jnp.zeros((batch, mamba2_heads(cfg), n, cfg.ssm_head_dim),
+                           jnp.float32)}

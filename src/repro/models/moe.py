@@ -1,0 +1,158 @@
+"""Token-choice top-k Mixture-of-Experts layer (granite-moe, grok-1).
+
+GShard/Switch-style capacity-bucketed dispatch expressed as einsums so GSPMD
+can lower the dispatch/combine to all-to-alls when the expert dimension is
+sharded.  The router softmax uses the HASTILY LUT exponential — the paper's
+technique applies to *every* softmax in the model, not just attention.
+
+Dispatch algebra (T tokens, E experts, C capacity per expert, k experts/token):
+  gates           = top-k( lut_softmax(x @ Wr) )                (T, E) sparse
+  dispatch[t,e,c] = 1 iff token t is slot c of expert e         (T, E, C)
+  expert_in       = einsum('tec,td->ecd', dispatch, x)          (E, C, D)
+  expert_out      = FFN_e(expert_in)   (batched over E)         (E, C, D)
+  y               = einsum('tec,ecd->td', dispatch*gate, out)   (T, D)
+
+Tokens overflowing an expert's capacity are dropped (standard; the residual
+connection carries them).  FLOPs are E·C·ffn = capacity_factor × the useful
+top-k FLOPs — recorded in the roofline's MODEL_FLOPS/HLO_FLOPs ratio.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from repro.configs.base import ModelConfig
+from repro.core.lut_softmax import lut_softmax
+from repro.core.streaming_attention import _EXP_FNS
+from repro.models.layers import _ACTS, _dtype, dense_init
+from repro.parallel.ctx import maybe_shard
+
+Params = Dict[str, Any]
+
+
+def _einsum32(eq: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    """bf16×bf16→f32 einsum.  The TPU MXU does this natively; the CPU dot
+    thunk cannot *execute* it (fine for dry-run lowering, which never runs),
+    so pure-CPU execution upcasts.  REPRO_TARGET_TPU=1 (set by dryrun.py)
+    keeps the TPU-native form in the lowered HLO."""
+    if (jax.default_backend() == "cpu"
+            and os.environ.get("REPRO_TARGET_TPU", "0") != "1"):
+        return jnp.einsum(eq, a.astype(jnp.float32), b.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum(eq, a, b, preferred_element_type=jnp.float32)
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    """Per-expert capacity: cf · k · T / E, rounded up to a multiple of 8."""
+    c = cfg.moe_capacity_factor * cfg.experts_per_token * n_tokens / cfg.num_experts
+    return max(8, int(-(-c // 8) * 8))
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+
+    def stack(k, d_in, d_out):
+        return (jax.random.normal(k, (e, d_in, d_out), jnp.float32)
+                * d_in ** -0.5).astype(dt)
+
+    p = {"router": dense_init(ks[0], d, e, dtype=jnp.float32),
+         "up": stack(ks[1], d, f), "down": stack(ks[2], f, d)}
+    if cfg.mlp_gated:
+        p["gate"] = stack(ks[3], d, f)
+    return p
+
+
+def _topk_dispatch(cfg: ModelConfig, probs: jax.Array, capacity: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """probs (T, E) → (dispatch (T,E,C) bool, combine (T,E,C) f32)."""
+    t, e = probs.shape
+    k = cfg.experts_per_token
+    remaining = probs
+    slot_of = []   # per choice: (T, E) one-hot of chosen expert
+    gate_of = []
+    for _ in range(k):  # iterative top-1 (k is small and static)
+        choice = jnp.argmax(remaining, axis=-1)                    # (T,)
+        onehot = jax.nn.one_hot(choice, e, dtype=probs.dtype)      # (T, E)
+        gate_of.append(jnp.sum(remaining * onehot, axis=-1))       # (T,)
+        slot_of.append(onehot)
+        remaining = remaining * (1.0 - onehot)
+    dispatch = jnp.zeros((t, e, capacity), jnp.float32)
+    combine = jnp.zeros((t, e, capacity), jnp.float32)
+    # Slot assignment: position within expert = running count of earlier
+    # (choice-round, token) pairs routed to that expert.
+    prior = jnp.zeros((e,), jnp.int32)
+    for onehot, gate in zip(slot_of, gate_of):
+        pos_in_e = jnp.cumsum(onehot, axis=0) - onehot + prior[None, :]  # (T,E)
+        prior = prior + jnp.sum(onehot, axis=0).astype(jnp.int32)
+        slot = jnp.sum(pos_in_e * onehot, axis=-1).astype(jnp.int32)     # (T,)
+        keep = (slot < capacity)
+        slot = jnp.clip(slot, 0, capacity - 1)
+        sl_onehot = jax.nn.one_hot(slot, capacity, dtype=jnp.float32)
+        d_k = onehot[..., None] * sl_onehot[:, None, :] * keep[:, None, None]
+        dispatch = dispatch + d_k
+        combine = combine + d_k * gate[:, None, None]
+    return dispatch, combine
+
+
+def _group_size(cfg: ModelConfig, t: int) -> int:
+    """Largest divisor of t not exceeding cfg.moe_group."""
+    g = min(cfg.moe_group, t)
+    while t % g:
+        g -= 1
+    return g
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, L, D) → (y (B, L, D), aux_loss scalar).
+
+    Tokens are split into GShard-style *groups* of ≤ ``cfg.moe_group``;
+    routing/capacity is per-group, so the (t, E, C) dispatch tensor is
+    O(T · cf · k · t_g) total — linear in T, not quadratic (C would otherwise
+    grow with T).  Groups also shard cleanly over the dp axis.
+    """
+    b, l, d = x.shape
+    t = b * l
+    tg = _group_size(cfg, t)
+    g = t // tg
+    # Groups stay dp-sharded through dispatch→FFN→combine; without explicit
+    # constraints SPMD picks a 128-way group sharding for the dispatch einsum
+    # and then fully rematerialises per layer ("involuntary full remat").
+    _g = lambda a: maybe_shard(a, ("dp",) + (None,) * (a.ndim - 1))
+    xt = _g(x.reshape(g, tg, d))
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"]["w"])
+    probs = lut_softmax(logits, exp_fn=_EXP_FNS[cfg.exp_mode])
+    capacity = moe_capacity(cfg, tg)
+    dispatch, combine = jax.vmap(
+        lambda pr: _topk_dispatch(cfg, pr, capacity))(probs)   # (G,t,E,C) ×2
+    # Renormalise combine weights over the selected experts (top-k convention).
+    denom = jnp.sum(combine, axis=(2, 3), keepdims=True)
+    combine = _g(combine / jnp.maximum(denom, 1e-9))
+    dispatch = _g(dispatch)
+
+    expert_in = _g(_einsum32("gtec,gtd->gecd", dispatch,
+                             xt.astype(jnp.float32)).astype(x.dtype))
+    act = _ACTS[cfg.act]
+    h = _einsum32("gecd,edf->gecf", expert_in, p["up"]).astype(x.dtype)
+    if cfg.mlp_gated:
+        gate = _einsum32("gecd,edf->gecf", expert_in,
+                         p["gate"]).astype(x.dtype)
+        h = act(gate) * h
+    else:
+        h = act(h)
+    h = maybe_shard(h, ("dp", None, None, "tp"))
+    expert_out = _g(_einsum32("gecf,efd->gecd", h, p["down"]))
+    y = _g(_einsum32("gtec,gecd->gtd", combine, expert_out)).astype(x.dtype)
+
+    # Load-balancing auxiliary loss (Switch eq. 4): E · Σ_e f_e · P_e.
+    frac_routed = jnp.mean(jnp.sum(dispatch, axis=-1), axis=(0, 1))   # (E,)
+    frac_prob = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    aux = cfg.num_experts * jnp.sum(frac_routed * frac_prob) / cfg.experts_per_token
+    return y.reshape(b, l, d), aux

@@ -1,0 +1,202 @@
+"""AdamW + schedules + clipping + gradient accumulation (pure JAX pytrees).
+
+Self-contained (no optax): the optimizer state mirrors the param pytree, so
+the sharding rules in ``parallel/sharding.py`` apply leaf-for-leaf and the
+checkpoint layer stores it like any other tree.
+
+``moment_dtype="bfloat16"`` halves optimizer memory (the ZeRO-style trick
+that lets grok-1-314b train on 256 chips — DESIGN.md §4); error introduced
+is bounded by bf16's 8 mantissa bits on the *moments*, not the weights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # ()
+    m: Params                # first moment (param-shaped tree)
+    v: Params                # second moment
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    moment_dtype: str = "float32"        # float32 | bfloat16
+
+
+def adamw_init(params: Params, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(grads: Params, state: AdamWState, params: Params,
+                 cfg: AdamWConfig, lr: Optional[jax.Array] = None,
+                 scan_subtree: Optional[Tuple[str, ...]] = None
+                 ) -> Tuple[Params, AdamWState, dict]:
+    """One AdamW step.  ``lr`` overrides cfg.lr (schedules).
+
+    ``scan_subtree`` names a nested-dict path (e.g. ("trunk", "periods"))
+    whose leaves are stacked along dim 0 (scan-over-layers params).  The
+    update for that subtree is *streamed* with lax.scan over dim 0, so the
+    f32 temporaries are per-layer-slice instead of whole-stack — at
+    grok-1 scale that is ~25 MB instead of ~1.5 GiB per leaf (DESIGN.md §4).
+    """
+    if cfg.grad_clip is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    lr = cfg.lr if lr is None else lr
+    step = state.step + 1
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd_tree(p_t, g_t, m_t, v_t):
+        new_m = jax.tree.map(
+            lambda g, m: (cfg.b1 * m.astype(jnp.float32)
+                          + (1 - cfg.b1) * g.astype(jnp.float32)
+                          ).astype(m.dtype), g_t, m_t)
+        new_v = jax.tree.map(
+            lambda g, v: (cfg.b2 * v.astype(jnp.float32)
+                          + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32))
+                          ).astype(v.dtype), g_t, v_t)
+
+        def upd(p, m, v):
+            mh = m.astype(jnp.float32) / c1
+            vh = v.astype(jnp.float32) / c2
+            delta = (mh / (jnp.sqrt(vh) + cfg.eps)
+                     + cfg.weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        return jax.tree.map(upd, p_t, new_m, new_v), new_m, new_v
+
+    def get(tree, path):
+        for k in path:
+            tree = tree[k]
+        return tree
+
+    def with_replaced(tree, path, value):
+        if not path:
+            return value
+        out = dict(tree)
+        out[path[0]] = with_replaced(tree[path[0]], path[1:], value)
+        return out
+
+    has_sub = scan_subtree is not None
+    if has_sub:
+        try:
+            sub_p = get(params, scan_subtree)
+        except (KeyError, TypeError):
+            has_sub = False
+
+    if has_sub:
+        sub_g = get(grads, scan_subtree)
+        sub_m = get(state.m, scan_subtree)
+        sub_v = get(state.v, scan_subtree)
+
+        def body(_, slices):
+            ps, gs, ms, vs = slices
+            return None, upd_tree(ps, gs, ms, vs)
+
+        _, (s_p, s_m, s_v) = jax.lax.scan(body, None,
+                                          (sub_p, sub_g, sub_m, sub_v))
+        # the (small) remainder of the tree updates whole-leaf
+        none = object()
+        rest = lambda t: with_replaced(t, scan_subtree, {})
+        r_p, r_m, r_v = upd_tree(rest(params), rest(grads), rest(state.m),
+                                 rest(state.v))
+        new_p = with_replaced(r_p, scan_subtree, s_p)
+        new_m = with_replaced(r_m, scan_subtree, s_m)
+        new_v = with_replaced(r_v, scan_subtree, s_v)
+    else:
+        new_p, new_m, new_v = upd_tree(params, grads, state.m, state.v)
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm}
+
+
+# --------------------------------------------------------------------------
+# schedules
+# --------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return sched
+
+
+# --------------------------------------------------------------------------
+# gradient accumulation
+# --------------------------------------------------------------------------
+
+def accumulated_grads(loss_fn: Callable, params: Params, batch: Any,
+                      microbatches: int, accum_dtype: str = "float32"
+                      ) -> Tuple[jax.Array, Params, Any]:
+    """Split ``batch`` dim0 into ``microbatches`` and mean loss+grads via scan.
+
+    Peak activation memory drops by ~microbatches× (HASTILY's pipeline-fill
+    trade-off in TPU form — DESIGN.md §2).  ``accum_dtype="bfloat16"`` halves
+    the resident accumulator — used for the largest models where the f32
+    accumulator tree alone exceeds HBM headroom; the loss is scaled by
+    1/microbatches *inside* the sum to keep magnitudes in bf16 range.
+    """
+    if microbatches <= 1:
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, grads, aux
+
+    acc_dt = jnp.dtype(accum_dtype)
+    inv = 1.0 / microbatches
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % microbatches == 0, (b, microbatches)
+        return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+    mb = jax.tree.map(reshape, batch)
+
+    def body(carry, mbatch):
+        loss_acc, grads_acc = carry
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mbatch)
+        grads_acc = jax.tree.map(
+            lambda a, g: a + (g.astype(jnp.float32) * inv).astype(a.dtype),
+            grads_acc, grads)
+        return (loss_acc + loss, grads_acc), aux
+
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+    (loss_sum, grads_sum), auxs = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zero_g), mb)
+    # grads stay in accum dtype; consumers (adamw/compress) upcast per leaf.
+    aux = jax.tree.map(lambda a: a[-1], auxs)
+    return loss_sum * inv, grads_sum, aux

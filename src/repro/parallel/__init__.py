@@ -1,0 +1,16 @@
+from repro.parallel.sharding import (batch_specs, cache_specs,
+                                     cache_specs_decode, fit_spec,
+                                     logical_axes, param_pspec, param_specs,
+                                     shard_tree, shardings_of)
+from repro.parallel.grad_compress import (compress_with_feedback,
+                                          compressed_psum, decompress,
+                                          feedback_init)
+from repro.parallel.pipeline import pipeline_apply, stack_stages
+from repro.parallel.ctx import activation_sharding, active_mesh, maybe_shard
+
+__all__ = ["param_specs", "param_pspec", "batch_specs", "cache_specs",
+           "cache_specs_decode",
+           "fit_spec", "logical_axes", "shard_tree", "shardings_of",
+           "compress_with_feedback", "compressed_psum", "decompress",
+           "feedback_init", "pipeline_apply", "stack_stages",
+           "activation_sharding", "active_mesh", "maybe_shard"]

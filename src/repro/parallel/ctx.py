@@ -1,0 +1,55 @@
+"""Activation-sharding context: mesh-aware models without mesh plumbing.
+
+Model code is pure and mesh-agnostic; at scale, though, two activations MUST
+carry explicit sharding constraints or remat/propagation blows per-chip
+memory (napkin math in DESIGN.md §4):
+
+- the residual-stream scan carry (saved once per period by remat — 64 ×
+  805 MB/chip on grok-1 without sequence-parallel sharding, 64 × 50 MB with);
+- the final logits (batch × seq × vocab — vocab must stay sharded through
+  the cross-entropy).
+
+``activation_sharding(mesh)`` installs a process-local mesh; ``maybe_shard``
+is a no-op without it, so CPU tests and single-device runs are untouched.
+Specs are logical (see ``sharding.logical_axes``) and are ``fit_spec``-ed, so
+non-divisible dims degrade to replicated instead of failing to compile.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.parallel.sharding import fit_spec
+
+_STATE = threading.local()
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Optional[Mesh]):
+    prev = active_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def maybe_shard(x: jax.Array, logical: Sequence) -> jax.Array:
+    """with_sharding_constraint(x, fit(logical)) if a mesh is active.
+
+    Internal constraints may shard unevenly (e.g. a 151655-entry vocab over
+    16 chips) — GSPMD pads; only jit *argument* shardings need divisibility.
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = fit_spec(tuple(logical), x.shape, mesh, allow_uneven=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,56 @@
+"""Gradient compression with error feedback for the DP all-reduce.
+
+At 1000+ nodes the gradient all-reduce dominates the step at small per-chip
+batch.  Casting gradients to bf16 *before* the reduction halves the bytes on
+the wire; the quantisation error is carried in a per-leaf residual buffer
+and re-injected next step (error feedback), so the *accumulated* update is
+unbiased — SGD/Adam convergence is preserved (Karimireddy et al., 2019).
+
+Two entry points:
+- ``compress_with_feedback`` / state — the transform the trainer applies to
+  per-shard gradients before they cross the mesh (in pjit the reduction is
+  implicit; casting the gradient leaves to bf16 makes XLA emit bf16
+  all-reduces, which is exactly the wire saving);
+- ``compressed_psum`` — the explicit shard_map form, for code that owns its
+  collectives (ring attention, the multicore softmax path).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def feedback_init(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads: Params, residual: Params
+                           ) -> Tuple[Params, Params]:
+    """→ (bf16 gradients to reduce, new residual).
+
+    residual' = (g + residual) − bf16(g + residual); the low-order bits lost
+    to the cast are replayed into the next step instead of discarded.
+    """
+    def comp(g, r):
+        corrected = g.astype(jnp.float32) + r
+        sent = corrected.astype(jnp.bfloat16)
+        return sent, corrected - sent.astype(jnp.float32)
+
+    sent = jax.tree.map(lambda g, r: comp(g, r)[0], grads, residual)
+    new_r = jax.tree.map(lambda g, r: comp(g, r)[1], grads, residual)
+    return sent, new_r
+
+
+def decompress(grads: Params, like: Params) -> Params:
+    return jax.tree.map(lambda g, p: g.astype(jnp.float32), grads, like)
+
+
+def compressed_psum(tree: Params, axis_name: str) -> Params:
+    """bf16-on-the-wire psum for use inside shard_map."""
+    return jax.tree.map(
+        lambda g: jax.lax.psum(g.astype(jnp.bfloat16), axis_name
+                               ).astype(jnp.float32), tree)

@@ -1,0 +1,250 @@
+"""Sharding rules: map parameter/batch/cache pytrees to PartitionSpecs.
+
+Logical axes → physical mesh axes:
+
+  ``dp``/``fsdp`` → ("pod", "data")   batch parallel / ZeRO-3 param sharding
+  ``tp``          → ("model",)        tensor parallel (heads / ffn / vocab)
+  ``sp``          → ("model",)        sequence parallel (activations)
+
+Rules are keyed by leaf *path suffix* (the model params are plain nested
+dicts, so the path is stable and readable, e.g.
+``trunk/periods/0/attn/wq/w``).  Every spec is passed through ``fit_spec``
+which drops any mesh axis that does not divide the corresponding dim — so
+one rule set serves every architecture and mesh (e.g. grok's 8 KV heads on a
+16-way model axis fall back to replicated heads, and batch-1 long-context
+decode falls back to model-only sharding) and compilation can never fail on
+divisibility.
+
+Design notes (HASTILY → TPU mapping, DESIGN.md §4):
+- 2D weight sharding (fsdp × tp) is what lets grok-1-314b's optimizer state
+  fit: 314B params spread over all 256/512 chips, not just the model axis.
+- MoE expert FFNs shard d_model over fsdp and d_ff over tp (expert count is
+  rarely divisible by an axis; the einsum dispatch keeps experts local).
+- in_proj matrices whose *output* dim is a concatenation of segments
+  (mamba/mamba2 fused projections) keep that dim replicated — slicing a
+  sharded dim would force a resharding collective per layer.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Leaf = Any
+
+# --------------------------------------------------------------------------
+# logical → physical
+# --------------------------------------------------------------------------
+
+
+def logical_axes(mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    names = mesh.axis_names
+    dp = tuple(n for n in ("pod", "data") if n in names)
+    tp = tuple(n for n in ("model",) if n in names)
+    return {"dp": dp, "fsdp": dp, "tp": tp, "sp": tp}
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def fit_spec(spec: Sequence, shape: Tuple[int, ...], mesh: Mesh,
+             allow_uneven: bool = False) -> P:
+    """Drop axes that don't divide their dim; resolve logical names.
+
+    ``allow_uneven=True`` keeps an axis whenever dim ≥ axis size (GSPMD pads
+    internally) — legal only for *internal* sharding constraints
+    (with_sharding_constraint); jit argument shardings require exact
+    divisibility.
+    """
+    log = logical_axes(mesh)
+    out = []
+    used: set = set()
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        phys = log.get(ax, (ax,)) if isinstance(ax, str) else tuple(ax)
+        phys = tuple(a for a in phys if a in mesh.axis_names and a not in used)
+        # greedily keep the longest admissible prefix
+        keep: Tuple[str, ...] = ()
+        size = 1
+        for a in phys:
+            nxt = size * mesh.shape[a]
+            if dim % nxt == 0 or (allow_uneven and dim >= nxt):
+                keep += (a,)
+                size = nxt
+            else:
+                break
+        used.update(keep)
+        out.append(keep if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+# (path-suffix regex, logical spec for the *trailing* dims). Checked in order;
+# leading stacked dims (scan-over-periods, expert stacks handled explicitly)
+# are padded with None.
+_PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # embeddings / head
+    (r"embed/tokens$", ("tp", "fsdp")),
+    (r"embed/positions$", (None, "tp")),
+    (r"lm_head/w$", ("fsdp", "tp")),
+    # attention
+    (r"attn/wq/w$", ("fsdp", "tp")),
+    (r"attn/wk/w$", ("fsdp", "tp")),
+    (r"attn/wv/w$", ("fsdp", "tp")),
+    (r"attn/wo/w$", ("tp", "fsdp")),
+    (r"attn/w[qkv]/b$", ("tp",)),
+    (r"attn/wo/b$", (None,)),
+    (r"attn/[qk]_norm$", (None,)),
+    # dense mlp
+    (r"mlp/(up|gate)/w$", ("fsdp", "tp")),
+    (r"mlp/down/w$", ("tp", "fsdp")),
+    (r"mlp/(up|gate|down)/b$", (None,)),
+    # moe (E, D, F) stacks
+    (r"moe/router/w$", (None, None)),
+    (r"moe/(up|gate)$", (None, "fsdp", "tp")),
+    (r"moe/down$", (None, "tp", "fsdp")),
+    # mamba
+    # in_proj's out dim is a concatenation of segments; mamba-1's cuts are
+    # shard-aligned and mamba-2's cost one resharding per layer — still far
+    # cheaper than a replicated (B, L, 2·d_inner) activation.
+    (r"mix/in_proj/w$", ("fsdp", "tp")),
+    (r"mix/x_proj/w$", ("tp", None)),
+    (r"mix/dt_proj/w$", (None, "tp")),
+    (r"mix/out_proj/w$", ("tp", "fsdp")),
+    (r"mix/conv_w$", (None, "tp")),
+    (r"mix/conv_b$", ("tp",)),
+    (r"mix/A_log$", ("tp", None)),
+    (r"mix/(D|dt_bias)$", ("tp",)),
+    (r"mix/norm_scale$", ("tp",)),
+    # norms and anything small
+    (r"(ln\w*|final_norm|norm|ln)/(scale|bias)$", (None,)),
+)
+
+
+def _match_rule(path: str) -> Optional[Tuple]:
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            return spec
+    return None
+
+
+def path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    spec = _match_rule(path)
+    if spec is None:
+        spec = (None,) * len(shape)         # replicate unknowns (safe default)
+    # pad leading stacked dims (scan periods / mamba2 A_log heads etc.)
+    if len(spec) < len(shape):
+        spec = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    elif len(spec) > len(shape):
+        spec = tuple(spec[-len(shape):])
+    return fit_spec(spec, shape, mesh)
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpec matching ``params`` (arrays or SDS)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: param_pspec(path_str(kp), x.shape, mesh), params)
+
+
+# --------------------------------------------------------------------------
+# batch / cache rules
+# --------------------------------------------------------------------------
+
+def batch_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Batch inputs: dim0 = global batch → dp; rest replicated."""
+    spec = ("dp",) + (None,) * (len(shape) - 1)
+    return fit_spec(spec, shape, mesh)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: batch_pspec(path_str(kp), x.shape, mesh), batch)
+
+
+# Unstacked rank of each cache leaf kind; extra leading dims are layer
+# stacks (scan-over-periods / encdec vmapped layers).
+_CACHE_BASE_NDIM = {"k": 4, "v": 4, "S": 4, "h": 3, "conv": 3, "pos": 2,
+                    "ks": 3, "vs": 3}
+
+
+def cache_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                decode: bool = False) -> P:
+    """KV/SSM caches: batch → dp; heads/channels → tp, with the trailing
+    dim (head_dim / d_inner) as the tp fallback when the head count does
+    not divide the model axis (e.g. 8 KV heads on a 16-way axis — grok,
+    gemma).  Layer-stacked leaves are detected structurally: rank above the
+    leaf kind's base rank = leading stack dims (replicated).
+
+    ``decode=True`` shards KV on the **sequence** dim instead: single-token
+    attention then computes logits shard-locally and tree-combines only the
+    tiny (m, Σexp, acc) partials — literally the paper's multi-core softmax
+    gather (Fig. 5), and it removes the per-layer cache permute that
+    head/Dh sharding costs at decode (§Perf pair 3)."""
+    leaf = path.rsplit("/", 1)[-1]
+    base = _CACHE_BASE_NDIM.get(leaf)
+    if base is None:
+        off = 1 if "periods" in path.split("/") else 0
+    else:
+        off = max(len(shape) - base, 0)
+    core = len(shape) - off
+    spec = [None] * len(shape)
+    if core >= 1:
+        spec[off] = "dp"
+    if decode and leaf in ("k", "v") and core >= 4:
+        spec[off + 2] = "tp"       # KV sequence dim
+    elif decode and leaf in ("ks", "vs") and core >= 3:
+        spec[off + 2] = "tp"       # per-row scales follow their rows
+    elif core >= 3:
+        spec[off + 1] = "tp"       # heads / channels
+        spec[-1] = "tp"            # head-dim fallback (dup dropped by fit)
+    return fit_spec(tuple(spec), shape, mesh)
+
+
+def cache_specs_decode(caches: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: cache_pspec(path_str(kp), x.shape, mesh, decode=True),
+        caches)
+
+
+def cache_specs(caches: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: cache_pspec(path_str(kp), x.shape, mesh), caches)
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def shardings_of(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_tree(tree: Any, specs: Any, mesh: Mesh) -> Any:
+    """device_put a pytree onto the mesh with the given specs."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,15 @@
+from repro.perfmodel.hardware import DEFAULT_HW, GPU, GpuAnchors, Hardware
+from repro.perfmodel.model import (BERT_BASE, BERT_LARGE, bert_ops,
+                                   encoder_layer_energy_j,
+                                   encoder_layer_latency_s, end_to_end_tops,
+                                   end_to_end_latency_s, headline_numbers,
+                                   softmax_cores, softmax_energy_j,
+                                   softmax_fraction, softmax_latency_s,
+                                   tops_per_watt)
+
+__all__ = ["Hardware", "GpuAnchors", "DEFAULT_HW", "GPU",
+           "softmax_latency_s", "softmax_energy_j", "softmax_cores",
+           "encoder_layer_latency_s", "encoder_layer_energy_j",
+           "softmax_fraction", "end_to_end_tops", "end_to_end_latency_s",
+           "tops_per_watt", "bert_ops", "headline_numbers",
+           "BERT_BASE", "BERT_LARGE"]

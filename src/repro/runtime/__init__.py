@@ -1,0 +1,4 @@
+from repro.runtime.trainer import (FailureInjector, SimulatedFailure,
+                                   TrainConfig, Trainer)
+
+__all__ = ["Trainer", "TrainConfig", "FailureInjector", "SimulatedFailure"]

@@ -1,0 +1,159 @@
+"""Batched serving engine: slot-based continuous batching over KV/SSM caches.
+
+The engine owns B *slots*.  Requests are admitted into free slots (prefill
+writes that slot's cache), and every ``step()`` decodes one token for all
+active slots in a single batched ``decode_step`` — the serving-side
+expression of HASTILY's pipeline: compute never waits for the slowest
+request, finished slots are recycled immediately.
+
+Slot mechanics: the model's caches are batched pytrees (leading dim B).
+Prefill runs on a b=1 view and is scattered into the slot index; decode runs
+on the full batch with a *per-slot* position vector via ``jax.vmap`` over
+the single-token step (dynamic_update_slice with per-example indices).
+Sampling: greedy or temperature (per-request).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (Lp,) int32
+    max_new: int = 32
+    temperature: float = 0.0           # 0 = greedy
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        if self.model.decode_step is None:
+            raise ValueError(f"{cfg.name}: encoder-only — no decode step")
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self.caches = self.model.init_cache(slots, max_len)
+        # Per-leaf batch axis: scan-stacked (periods) cache leaves carry the
+        # period dim first, so their batch axis is 1; everything else is 0.
+        self.axes = jax.tree_util.tree_map_with_path(
+            lambda kp, a: 1 if any(str(getattr(k, "key", "")) == "periods"
+                                   for k in kp) else 0,
+            self.caches)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, np.int64)          # per-slot next index
+        self.last_tok = np.zeros(slots, np.int64)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+
+        m = self.model
+        axes = self.axes
+
+        # b=1 prefill, jitted once per prompt-length bucket
+        def prefill_one(params, tokens, caches1):
+            logits, caches1 = m.prefill(params, {"tokens": tokens}, caches1)
+            return logits, caches1
+        self._prefill = jax.jit(prefill_one)
+
+        # batched single-token decode with per-slot positions
+        def decode_all(params, toks, caches, idxs):
+            def one(tok, cache, idx):
+                cache1 = jax.tree.map(jnp.expand_dims, cache, axes)
+                lg, c = m.decode_step(params, tok[None], cache1, idx)
+                c = jax.tree.map(jnp.squeeze, c, axes)
+                return lg[0], c
+            return jax.vmap(one, in_axes=(0, axes, 0),
+                            out_axes=(0, axes))(toks, caches, idxs)
+        self._decode = jax.jit(decode_all)
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _slot_caches(self, slot: int) -> Any:
+        return jax.tree.map(
+            lambda a, ax: jnp.take(a, jnp.array([slot]), axis=ax),
+            self.caches, self.axes)
+
+    def _write_slot(self, slot: int, caches1: Any) -> None:
+        def wr(full, one, ax):
+            idx = [slice(None)] * full.ndim
+            idx[ax] = slot
+            return full.at[tuple(idx)].set(jnp.squeeze(one, ax))
+        self.caches = jax.tree.map(wr, self.caches, caches1, self.axes)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            lp = len(req.prompt)
+            assert lp + req.max_new <= self.max_len, "prompt too long"
+            fresh = jax.tree.map(jnp.zeros_like, self._slot_caches(slot))
+            logits, c1 = self._prefill(
+                self.params, jnp.asarray(req.prompt, jnp.int32)[None], fresh)
+            self._write_slot(slot, c1)
+            tok = self._sample(logits[0], req.temperature)
+            req.tokens.append(int(tok))
+            # the prefill's own sample may already satisfy eos/max_new
+            if (len(req.tokens) >= req.max_new
+                    or (req.eos_id is not None and int(tok) == req.eos_id)):
+                req.done = True
+                self.finished.append(req)
+                continue
+            self.active[slot] = req
+            self.pos[slot] = lp
+            self.last_tok[slot] = int(tok)
+
+    def _sample(self, logits: jax.Array, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, logits / temperature))
+
+    def step(self) -> int:
+        """Admit + decode one token for every active slot.  → #active."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        toks = jnp.asarray(self.last_tok, jnp.int32)
+        idxs = jnp.asarray(self.pos, jnp.int32)
+        logits, self.caches = self._decode(self.params, toks, self.caches,
+                                           idxs)
+        for s in live:
+            req = self.active[s]
+            tok = self._sample(logits[s], req.temperature)
+            req.tokens.append(int(tok))
+            self.pos[s] += 1
+            self.last_tok[s] = int(tok)
+            hit_eos = req.eos_id is not None and int(tok) == req.eos_id
+            if len(req.tokens) >= req.max_new or hit_eos:
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None           # recycle immediately
+        return len(live)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self.queue or any(a is not None for a in self.active)):
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("serving did not drain")
+        return self.finished

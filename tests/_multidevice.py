@@ -1,0 +1,23 @@
+"""Helper: run a snippet in a subprocess with N placeholder devices.
+
+Device count is locked at first jax init, so multi-chip shard_map tests
+cannot run in the main pytest process (which must keep 1 device for the
+smoke tests — assignment requirement)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(snippet: str, n_devices: int = 8,
+                     timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(snippet)],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    assert proc.returncode == 0, f"subprocess failed:\n{proc.stderr[-4000:]}"
+    return proc.stdout

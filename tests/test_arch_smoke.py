@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, SHAPES, all_cells, cell_status, get_config
+from repro.models import batch_specs, build_model
+
+ALL = list(ASSIGNED) + ["bert-base", "bert-large"]
+
+
+def _batch(cfg, b, l, rng):
+    out = {}
+    for k, v in batch_specs(cfg, b, l).items():
+        if v.dtype == jnp.int32:
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, v.shape),
+                                 jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=v.shape).astype(np.float32)
+                                 * 0.05, v.dtype)
+    return out
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_train_step(name, rng):
+    cfg = get_config(name + "-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 16, rng)
+    loss, aux = model.loss(params, batch)
+    assert loss.shape == () and bool(jnp.isfinite(loss)), name
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, name
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_prefill_decode_shapes(name, rng):
+    cfg = get_config(name + "-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, L = 2, 12
+    caches = model.init_cache(B, L + 4)
+    batch = {k: v for k, v in _batch(cfg, B, L, rng).items() if k != "labels"}
+    logits, state = model.prefill(params, batch, caches)
+    if model.decode_step is None:        # encoder-only (bert): full-seq MLM
+        assert cfg.family == "bert"
+        assert logits.shape == (B, L, cfg.vocab_size), (name, logits.shape)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), name
+        return
+    assert logits.shape == (B, cfg.vocab_size), (name, logits.shape)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), name
+    tok = jnp.zeros((B,), jnp.int32)
+    lg, state = model.decode_step(params, tok, state, jnp.int32(L))
+    assert lg.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg.astype(jnp.float32)).all()), name
+
+
+def test_full_configs_match_assignment():
+    """The registry must carry the exact published dimensions."""
+    expect = {
+        "seamless-m4t-large-v2": dict(d_model=1024, num_heads=16,
+                                      num_kv_heads=16, d_ff=8192,
+                                      vocab_size=256206),
+        "granite-moe-3b-a800m": dict(num_layers=32, d_model=1536,
+                                     num_heads=24, num_kv_heads=8, d_ff=512,
+                                     vocab_size=49155, num_experts=40,
+                                     experts_per_token=8),
+        "grok-1-314b": dict(num_layers=64, d_model=6144, num_heads=48,
+                            num_kv_heads=8, d_ff=32768, vocab_size=131072,
+                            num_experts=8, experts_per_token=2),
+        "falcon-mamba-7b": dict(num_layers=64, d_model=4096,
+                                vocab_size=65024, ssm_state=16),
+        "internvl2-1b": dict(num_layers=24, d_model=896, num_heads=14,
+                             num_kv_heads=2, d_ff=4864, vocab_size=151655),
+        "zamba2-1.2b": dict(num_layers=38, d_model=2048, num_heads=32,
+                            num_kv_heads=32, d_ff=8192, vocab_size=32000,
+                            ssm_state=64),
+        "starcoder2-3b": dict(num_layers=30, d_model=3072, num_heads=24,
+                              num_kv_heads=2, d_ff=12288, vocab_size=49152),
+        "gemma2-9b": dict(num_layers=42, d_model=3584, num_heads=16,
+                          num_kv_heads=8, d_ff=14336, vocab_size=256000),
+        "deepseek-7b": dict(num_layers=30, d_model=4096, num_heads=32,
+                            num_kv_heads=32, d_ff=11008, vocab_size=102400),
+        "gemma3-12b": dict(num_layers=48, d_model=3840, num_heads=16,
+                           num_kv_heads=8, d_ff=15360, vocab_size=262144),
+    }
+    for name, fields in expect.items():
+        cfg = get_config(name)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (name, k, getattr(cfg, k), v)
+
+
+def test_cell_matrix():
+    cells = all_cells()
+    assert len(cells) == 40
+    runs = [c for c in cells if c[2] == "run"]
+    skips = [c for c in cells if c[2].startswith("skip")]
+    assert len(skips) == 6      # long_500k for the 6 full-attention archs
+    for a, s, st in skips:
+        assert s == "long_500k"
+    # sub-quadratic archs DO run long_500k
+    assert ("falcon-mamba-7b", "long_500k", "run") in cells
+    assert ("gemma3-12b", "long_500k", "run") in cells
+
+
+def test_param_counts_plausible():
+    """Analytic parameter counts should land near the advertised sizes."""
+    approx = {"grok-1-314b": 314e9, "falcon-mamba-7b": 7e9,
+              "deepseek-7b": 7e9, "gemma2-9b": 9e9, "gemma3-12b": 12e9,
+              "starcoder2-3b": 3e9}
+    for name, target in approx.items():
+        n = get_config(name).param_count()
+        assert 0.5 * target < n < 1.8 * target, (name, n / 1e9)

@@ -1,0 +1,94 @@
+"""Checkpointing: atomicity, verification, retention, async, elasticity."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step, restore, retain,
+                              save, steps)
+
+
+def tree(rng):
+    return {"params": {"w": jnp.asarray(rng.normal(size=(4, 8))
+                                        ).astype(jnp.bfloat16),
+                       "b": jnp.asarray(rng.normal(size=(8,))
+                                        ).astype(jnp.float32)},
+            "opt": [jnp.ones((3,), jnp.int32), jnp.zeros((2, 2))]}
+
+
+def test_roundtrip_bitexact(tmp_path, rng):
+    t = tree(rng)
+    save(str(tmp_path), 7, t)
+    ref = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    got, step, _ = restore(str(tmp_path), ref)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype    # bf16 survives npz round trip
+
+
+def test_latest_and_retention(tmp_path, rng):
+    t = tree(rng)
+    for s in (1, 5, 3, 9):
+        save(str(tmp_path), s, t)
+    assert latest_step(str(tmp_path)) == 9
+    retain(str(tmp_path), keep=2)
+    assert steps(str(tmp_path)) == [5, 9]
+
+
+def test_half_written_checkpoint_ignored(tmp_path, rng):
+    t = tree(rng)
+    save(str(tmp_path), 1, t)
+    # simulate crash mid-write: a step dir without manifest
+    os.makedirs(tmp_path / "step_00000099")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_corruption_detected(tmp_path, rng):
+    t = tree(rng)
+    path = save(str(tmp_path), 2, t)
+    m = json.load(open(os.path.join(path, "manifest.json")))
+    key = next(iter(m["leaves"]))
+    m["leaves"][key]["sha256"] = "0" * 16
+    json.dump(m, open(os.path.join(path, "manifest.json"), "w"))
+    ref = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    with pytest.raises(IOError, match="corruption"):
+        restore(str(tmp_path), ref)
+
+
+def test_shape_mismatch_rejected(tmp_path, rng):
+    t = tree(rng)
+    save(str(tmp_path), 3, t)
+    bad = dict(t)
+    bad["params"] = {"w": jnp.zeros((5, 5), jnp.bfloat16),
+                     "b": t["params"]["b"]}
+    ref = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), bad)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore(str(tmp_path), ref)
+
+
+def test_async_checkpointer(tmp_path, rng):
+    t = tree(rng)
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        ck.save(s, t)
+    ck.wait()
+    assert steps(str(tmp_path)) == [20, 30]
+
+
+def test_elastic_restore_onto_mesh(tmp_path, rng):
+    """Restore re-shards onto a (1-device) mesh — the elastic path."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    t = {"w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))}
+    save(str(tmp_path), 1, t)
+    mesh = make_host_mesh()
+    specs = {"w": P()}
+    ref = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    got, _, _ = restore(str(tmp_path), ref, mesh=mesh, specs=specs)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
+    assert got["w"].sharding.mesh.shape == mesh.shape

@@ -1,0 +1,66 @@
+"""LUT softmax vs exact softmax; stability and masking invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.lut_softmax import lut_log_softmax, lut_softmax, softcap
+
+
+def test_matches_exact_softmax(rng):
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32) * 5)
+    got = np.asarray(lut_softmax(x))
+    want = np.asarray(jax.nn.softmax(x, axis=-1))
+    np.testing.assert_allclose(got, want, atol=3e-5)
+
+
+def test_rows_sum_to_one(rng):
+    x = jnp.asarray(rng.normal(size=(4, 33)).astype(np.float32) * 30)
+    s = np.asarray(lut_softmax(x)).sum(-1)
+    np.testing.assert_allclose(s, 1.0, atol=1e-5)
+
+
+def test_overflow_stability():
+    """Paper Eq. 1: the max subtraction must keep huge logits finite."""
+    x = jnp.array([[1e4, 1e4 - 1.0, 0.0]])
+    p = np.asarray(lut_softmax(x))
+    assert np.isfinite(p).all() and p[0, 2] == 0.0
+    assert p[0, 0] > p[0, 1] > 0
+
+
+def test_masking():
+    x = jnp.zeros((1, 4))
+    mask = jnp.array([[True, True, False, False]])
+    p = np.asarray(lut_softmax(x, where=mask))
+    np.testing.assert_allclose(p[0], [0.5, 0.5, 0.0, 0.0], atol=1e-6)
+
+
+def test_all_masked_row_is_zero():
+    p = np.asarray(lut_softmax(jnp.zeros((1, 4)),
+                               where=jnp.zeros((1, 4), bool)))
+    np.testing.assert_array_equal(p, 0.0)
+
+
+def test_log_softmax_consistent(rng):
+    x = jnp.asarray(rng.normal(size=(5, 17)).astype(np.float32) * 3)
+    lp = np.asarray(lut_log_softmax(x))
+    np.testing.assert_allclose(np.exp(lp), np.asarray(lut_softmax(x)),
+                               atol=5e-5)
+
+
+def test_softcap():
+    x = jnp.array([-1e4, 0.0, 1e4])
+    y = np.asarray(softcap(x, 30.0))
+    assert abs(y[0] + 30) < 1e-3 and y[1] == 0 and abs(y[2] - 30) < 1e-3
+    np.testing.assert_array_equal(np.asarray(softcap(x, None)), np.asarray(x))
+
+
+@given(hnp.arrays(np.float32, (3, 16),
+                  elements=st.floats(-50, 50, width=32)))
+@settings(max_examples=100, deadline=None)
+def test_shift_invariance(x):
+    """Property: softmax(x + c) == softmax(x) — the stable-form guarantee."""
+    p1 = np.asarray(lut_softmax(jnp.asarray(x)))
+    p2 = np.asarray(lut_softmax(jnp.asarray(x) + 13.7))
+    np.testing.assert_allclose(p1, p2, atol=2e-4)

@@ -1,0 +1,52 @@
+"""INT8 quantisation substrate (paper §V) — properties and bounds."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.quant import (QTensor, dense_maybe_quant, int8_matmul,
+                              quantize, quantize_dynamic)
+
+
+def test_roundtrip_error_bound(rng):
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    q = quantize(w, axis=0)
+    err = np.abs(np.asarray(q.dequantize()) - np.asarray(w))
+    # symmetric quantisation: |err| ≤ scale/2 per column
+    bound = np.asarray(q.scale) / 2 + 1e-7
+    assert (err <= bound).all()
+
+
+def test_quantize_dtype_and_range(rng):
+    q = quantize(jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32)))
+    assert q.values.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q.values))) <= 127
+
+
+@given(hnp.arrays(np.float32, (8, 16),
+                  elements=st.floats(-100, 100, width=32)))
+@settings(max_examples=100, deadline=None)
+def test_scale_positive_and_error_bounded(w):
+    q = quantize(jnp.asarray(w), axis=0)
+    assert (np.asarray(q.scale) > 0).all()
+    err = np.abs(np.asarray(q.dequantize()) - w)
+    assert (err <= np.asarray(q.scale) / 2 + 1e-6).all()
+
+
+def test_matmul_vs_float(rng):
+    x = jnp.asarray(rng.normal(size=(32, 256)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    got = np.asarray(int8_matmul(x, quantize(w, axis=0)))
+    rel = np.linalg.norm(got - np.asarray(x @ w)) / np.linalg.norm(x @ w)
+    assert rel < 0.03
+
+
+def test_dense_maybe_quant_dispatch(rng):
+    x = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    exact = np.asarray(dense_maybe_quant(x, w))
+    q = np.asarray(dense_maybe_quant(x, quantize(w, axis=0)))
+    forced = np.asarray(dense_maybe_quant(x, w, use_int8=True))
+    np.testing.assert_allclose(exact, np.asarray(x @ w), atol=1e-5)
+    np.testing.assert_allclose(q, forced, atol=1e-5)
+    assert np.linalg.norm(q - exact) / np.linalg.norm(exact) < 0.05
