@@ -17,11 +17,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter on row names")
     ap.add_argument("--skip-micro", action="store_true")
+    ap.add_argument("--skip-serving", action="store_true",
+                    help="skip the slot-vs-paged serving A/B (the slowest "
+                         "family: drains mixed traffic through two engines)")
     args = ap.parse_args()
 
     from benchmarks.figures import ALL_FIGURES
     from benchmarks.roofline import roofline_rows
     from benchmarks.microbench import ALL_MICRO
+    from benchmarks.serving_bench import ALL_SERVING
 
     print("name,value,derived")
 
@@ -40,6 +44,9 @@ def main() -> None:
     if not args.skip_micro:
         for micro in ALL_MICRO:
             emit(micro())
+    if not args.skip_serving:
+        for bench in ALL_SERVING:
+            emit(bench())
 
 
 if __name__ == "__main__":

@@ -1,8 +1,10 @@
 """End-to-end serving driver (the paper's kind: inference): batched
-requests through the slot-based continuous-batching engine, mixed prompt
-lengths and sampling temperatures, with throughput accounting.
+requests through a continuous-batching engine, mixed prompt lengths and
+sampling temperatures, with throughput accounting.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-9b-smoke]
+      PYTHONPATH=src python examples/serve_lm.py --arch deepseek-7b-smoke \
+          --paged              # block/paged KV cache (docs/architecture.md)
 """
 import argparse
 import time
@@ -12,7 +14,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import Request, ServingEngine
+from repro.serving import PagedServingEngine, Request, ServingEngine
 
 
 def main():
@@ -21,13 +23,24 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-KV engine (full-length KV layouts only, "
+                         "e.g. deepseek-7b-smoke)")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, slots=args.slots,
-                           max_len=args.max_len)
+    if args.paged:
+        num_pages = args.slots * args.max_len // args.page_size
+        engine = PagedServingEngine(cfg, params, slots=args.slots,
+                                    page_size=args.page_size,
+                                    num_pages=num_pages,
+                                    max_len=args.max_len)
+    else:
+        engine = ServingEngine(cfg, params, slots=args.slots,
+                               max_len=args.max_len)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):

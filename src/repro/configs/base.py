@@ -77,7 +77,13 @@ class ModelConfig:
 
     # --- numerics & HASTILY technique toggles ---
     dtype: str = "bfloat16"
-    attn_impl: str = "streaming"               # streaming (HASTILY) | naive (baseline)
+    # Attention backend (core/attention_api registry): "auto" resolves
+    # per-call from device platform and call shape; or pin one of the
+    # registered names ("jnp" | "pallas" | "ring" | "naive" | ...).
+    attn_backend: str = "auto"
+    # Legacy selector, honoured when attn_backend == "auto":
+    # streaming (HASTILY) | naive (baseline) | pallas (kernel fwd)
+    attn_impl: str = "streaming"
     exp_mode: str = "lut"                      # lut | lut0 | exact
     block_k: int = 512
     use_int8: bool = False

@@ -9,6 +9,9 @@
 from repro.core.lut_exp import lut_exp, lut_exp2, make_table, K
 from repro.core.lut_softmax import lut_softmax, lut_log_softmax, softcap
 from repro.core.streaming_attention import streaming_attention, naive_attention
+from repro.core.attention_api import (attention, backend_for_config,
+                                      get_backend, list_backends,
+                                      register_backend, resolve_backend)
 from repro.core.ring_attention import ring_attention, distributed_decode_attention
 from repro.core.multicore_softmax import (sharded_softmax, sharded_softmax_tree,
                                           tree_allreduce)
@@ -18,6 +21,8 @@ __all__ = [
     "lut_exp", "lut_exp2", "make_table", "K",
     "lut_softmax", "lut_log_softmax", "softcap",
     "streaming_attention", "naive_attention",
+    "attention", "backend_for_config", "get_backend", "list_backends",
+    "register_backend", "resolve_backend",
     "ring_attention", "distributed_decode_attention",
     "sharded_softmax", "sharded_softmax_tree", "tree_allreduce",
     "QTensor", "quantize", "quantize_dynamic", "int8_matmul",

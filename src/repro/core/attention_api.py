@@ -1,0 +1,299 @@
+"""Unified attention entry point: one call, pluggable backends.
+
+HASTILY's O(l) streaming softmax/attention (§III-B2, §IV) exists in this
+repo in several concrete forms — the pure-jnp online-softmax scan, the Pallas
+TPU kernel, the inter-chip ring, and the materialised-logits reference.
+Related CIM designs (X-Former, CIMple) treat softmax/attention the same way:
+a swappable compute backend behind one dataflow interface.  This module is
+that seam.
+
+Usage::
+
+    from repro.core.attention_api import attention
+
+    out = attention(q, k, v, causal=True, backend="pallas")   # explicit
+    out = attention(q, k, v, causal=True)                     # auto-resolve
+
+Backends are registered with :func:`register_backend`; each carries a
+``supports`` predicate so ``backend="auto"`` can pick the fastest
+implementation whose constraints hold for the actual call (device platform,
+static vs traced lengths, ring-buffer position tables, query length).
+Registering a new variant is one decorator — models pick it up via
+``cfg.attn_backend`` with no model-code changes.
+
+All backends share one signature: ``fn(q, k, v, **AttentionCall kwargs)``
+with q ``(B, Hq, Lq, D)``, k/v ``(B, Hkv, Lkv, D)``, ``Hq % Hkv == 0`` (GQA),
+returning ``(B, Hq, Lq, D)`` in q's dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.streaming_attention import naive_attention, streaming_attention
+
+AttentionFn = Callable[..., jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionCall:
+    """Static facts about one attention call that drive backend resolution."""
+    lq: int
+    lkv: int
+    platform: str
+    static_lengths: bool          # q_offset / kv_len are python ints (or None)
+    has_kv_pos: bool              # ring-buffer position table supplied
+    inside_shard_map: bool        # an axis_name was supplied
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str
+    fn: AttentionFn
+    supports: Callable[[AttentionCall], bool]
+    auto_ok: Callable[[AttentionCall], bool]   # gate for backend="auto"
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, BackendSpec] = {}
+
+#: resolution order for ``backend="auto"`` — first auto-eligible backend wins.
+#: "ring" is only eligible inside shard_map, "naive" is the last resort.
+_AUTO_ORDER: Tuple[str, ...] = ("pallas", "naive_decode", "jnp", "ring",
+                                "naive")
+
+
+def register_backend(name: str, *, supports: Callable[[AttentionCall], bool],
+                     auto_ok: Optional[Callable[[AttentionCall], bool]] = None,
+                     doc: str = "") -> Callable[[AttentionFn], AttentionFn]:
+    """Decorator: register ``fn`` as attention backend ``name``.
+
+    ``supports(call)`` must be a cheap, trace-free predicate; it validates
+    explicit selection.  ``auto_ok`` (default: same as ``supports``)
+    additionally gates ``backend="auto"`` — e.g. the Pallas kernel *can* run
+    anywhere via interpret mode but should only be auto-picked on TPU.
+    """
+    def deco(fn: AttentionFn) -> AttentionFn:
+        _REGISTRY[name] = BackendSpec(name=name, fn=fn, supports=supports,
+                                      auto_ok=auto_ok or supports,
+                                      doc=doc or (fn.__doc__ or ""))
+        return fn
+    return deco
+
+
+def get_backend(name: str) -> BackendSpec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown attention backend {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def backend_for_config(attn_backend: str, attn_impl: str = "streaming") -> str:
+    """Map config fields to a registry name.
+
+    ``attn_backend`` (a registry name) wins when set; at its ``"auto"``
+    default the legacy ``attn_impl`` field ("streaming" | "naive" | "pallas")
+    is honoured.  "naive"/"pallas" keep their exact pre-registry behaviour;
+    "streaming" (the old default) maps to auto, which is identical off-TPU
+    and *upgrades* prefill to the Pallas kernel on TPU — that platform
+    dispatch is the point of the registry.  Pin ``attn_backend="jnp"`` for
+    the bit-exact streaming scan everywhere (e.g. streaming-vs-pallas A/Bs).
+    """
+    if attn_backend and attn_backend != "auto":
+        return attn_backend
+    legacy = {"streaming": "auto", "naive": "naive", "pallas": "pallas"}
+    if attn_impl not in legacy:
+        raise KeyError(f"unknown attn_impl {attn_impl!r}; "
+                       f"known: {sorted(legacy)}")
+    return legacy[attn_impl]
+
+
+# --------------------------------------------------------------------------
+# resolution
+# --------------------------------------------------------------------------
+
+def _is_static(x) -> bool:
+    return x is None or isinstance(x, (int, float))
+
+
+def describe_call(q, k, *, q_offset=0, kv_len=None, kv_pos=None,
+                  axis_name: Optional[str] = None,
+                  platform: Optional[str] = None) -> AttentionCall:
+    return AttentionCall(
+        lq=q.shape[2], lkv=k.shape[2],
+        platform=platform or jax.default_backend(),
+        static_lengths=_is_static(q_offset) and _is_static(kv_len),
+        has_kv_pos=kv_pos is not None,
+        inside_shard_map=axis_name is not None)
+
+
+def resolve_backend(backend: str, call: AttentionCall, *,
+                    fallback: bool = False) -> BackendSpec:
+    """Explicit name → validate; ``"auto"`` → first eligible in _AUTO_ORDER.
+
+    ``fallback=True`` downgrades an unsupported *explicit* choice to auto
+    resolution instead of raising — the config-driven model path uses this so
+    e.g. ``attn_backend="pallas"`` still decodes (the kernel has no cached
+    path) while direct API callers get a hard error.
+    """
+    if backend != "auto":
+        spec = get_backend(backend)
+        if spec.supports(call):
+            return spec
+        if not fallback:
+            raise ValueError(
+                f"attention backend {backend!r} does not support this call: "
+                f"{call}")
+    for name in _AUTO_ORDER:
+        spec = _REGISTRY.get(name)
+        if spec is not None and spec.auto_ok(call):
+            return spec
+    raise ValueError(f"no registered attention backend supports this call: "
+                     f"{call}")
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              backend: str = "auto",
+              scale: Optional[float] = None,
+              causal: bool = False,
+              window: Optional[int] = None,
+              cap: Optional[float] = None,
+              block_k: int = 512,
+              exp_mode: str = "lut",
+              q_offset: jax.Array | int = 0,
+              kv_len: Optional[jax.Array | int] = None,
+              kv_pos: Optional[jax.Array] = None,
+              axis_name: Optional[str] = None,
+              fallback: bool = False) -> jax.Array:
+    """The single attention entry point (see module docstring).
+
+    ``backend="auto"`` resolves per-call: the Pallas kernel where its static
+    constraints hold on TPU, the O(L)-logits naive row for single-token
+    decode, the streaming jnp scan otherwise.  Pass a registered name to pin
+    an implementation (tests pin ``"naive"`` as the oracle); an unsupported
+    explicit choice raises unless ``fallback=True`` (the model path).
+    """
+    call = describe_call(q, k, q_offset=q_offset, kv_len=kv_len, kv_pos=kv_pos,
+                         axis_name=axis_name)
+    spec = resolve_backend(backend, call, fallback=fallback)
+    kw: Dict[str, Any] = dict(scale=scale, causal=causal, window=window,
+                              cap=cap, block_k=block_k, exp_mode=exp_mode,
+                              q_offset=q_offset, kv_len=kv_len, kv_pos=kv_pos)
+    if axis_name is not None:
+        kw["axis_name"] = axis_name
+    return spec.fn(q, k, v, **kw)
+
+
+# --------------------------------------------------------------------------
+# built-in backends
+# --------------------------------------------------------------------------
+
+@register_backend(
+    "naive",
+    supports=lambda call: not call.inside_shard_map,
+    doc="Materialised-logits reference (PUMA dataflow): O(l²) memory; the "
+        "correctness oracle every other backend is tested against.")
+def _naive(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
+           q_offset, kv_len, kv_pos):
+    del block_k  # logits are materialised in one piece
+    return naive_attention(q, k, v, scale=scale, causal=causal, window=window,
+                           cap=cap, exp_mode=exp_mode, q_offset=q_offset,
+                           kv_len=kv_len, kv_pos=kv_pos)
+
+
+@register_backend(
+    "naive_decode",
+    supports=lambda call: call.lq == 1 and not call.inside_shard_map,
+    doc="Single-token decode fast path: the logits row is O(L) already — the "
+        "KV-block scan buys nothing and costs a collective-permute per block "
+        "on a sharded cache (measured 12 GiB/token at 500k ctx; §Perf).")
+def _naive_decode(q, k, v, **kw):
+    return _naive(q, k, v, **kw)
+
+
+@register_backend(
+    "jnp",
+    supports=lambda call: not call.inside_shard_map,
+    doc="Pure-jnp streaming scan (HASTILY §IV): online-softmax over KV "
+        "blocks, O(l) memory, flash-style custom VJP, fully dynamic "
+        "lengths/positions.  The default on CPU and for cached decode.")
+def _jnp(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
+         q_offset, kv_len, kv_pos):
+    return streaming_attention(q, k, v, scale=scale, causal=causal,
+                               window=window, cap=cap, block_k=block_k,
+                               exp_mode=exp_mode, q_offset=q_offset,
+                               kv_len=kv_len, kv_pos=kv_pos)
+
+
+def _pallas_supported(call: AttentionCall) -> bool:
+    # The kernel wants static lengths (serving buckets them), no ring-buffer
+    # position tables, and multi-row queries (decode rows go to naive_decode).
+    return (call.static_lengths and not call.has_kv_pos
+            and not call.inside_shard_map and call.lq > 1)
+
+
+@register_backend(
+    "pallas",
+    supports=_pallas_supported,
+    # interpret=True keeps it runnable off-TPU when explicitly selected, but
+    # auto resolution only picks the kernel on real TPU hardware.
+    auto_ok=lambda call: _pallas_supported(call) and call.platform == "tpu",
+    doc="Pallas TPU kernel forward (interpret mode off-TPU) with the jnp "
+        "flash backward attached as custom VJP — kernel on the hot forward "
+        "path, autodiff still works for training.  Static lengths only.")
+def _pallas(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
+            q_offset, kv_len, kv_pos):
+    assert kv_pos is None, "pallas backend has no ring-buffer support"
+    from repro.kernels import streaming_attention as pallas_attention
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    kernel_kw = dict(scale=float(scale), causal=causal, window=window,
+                     cap=cap, exp_mode=exp_mode,
+                     block_q=min(block_k, 512), block_k=min(block_k, 512),
+                     q_offset=int(q_offset),
+                     kv_len=None if kv_len is None else int(kv_len))
+    jnp_kw = dict(scale=scale, causal=causal, window=window, cap=cap,
+                  block_k=block_k, exp_mode=exp_mode, q_offset=q_offset,
+                  kv_len=kv_len)
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return pallas_attention(q, k, v, **kernel_kw)
+
+    def attn_fwd(q, k, v):
+        return attn(q, k, v), (q, k, v)
+
+    def attn_bwd(res, g):
+        qr, kr, vr = res
+        _, vjp = jax.vjp(
+            lambda a, b, c: streaming_attention(a, b, c, **jnp_kw),
+            qr, kr, vr)
+        return vjp(g)
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn(q, k, v)
+
+
+@register_backend(
+    "ring",
+    supports=lambda call: call.inside_shard_map,
+    doc="Inter-chip ring attention: KV shards rotate around a mesh axis via "
+        "ppermute while resident Q streams them (HASTILY §IV lifted to ICI). "
+        "Only callable inside shard_map — pass axis_name.")
+def _ring(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
+          q_offset, kv_len, kv_pos, axis_name):
+    del block_k  # the ring hop is the block
+    if (kv_pos is not None or kv_len is not None
+            or not _is_static(q_offset) or q_offset != 0):
+        raise ValueError("ring backend: positions derive from the mesh; "
+                         "kv_pos/kv_len/q_offset are not supported")
+    from repro.core.ring_attention import ring_attention
+    return ring_attention(q, k, v, axis_name, scale=scale, causal=causal,
+                          window=window, cap=cap, exp_mode=exp_mode)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.attention_api import backend_for_config, get_backend
 from repro.models import encdec as ED
 from repro.models import lm as LM
 from repro.models.lm import cross_entropy
@@ -84,6 +85,11 @@ def _encdec_decode(cfg, params, token, state, index):
 
 
 def build_model(cfg: ModelConfig) -> Model:
+    # Fail fast on a mistyped backend name here rather than deep inside a
+    # jitted trace (resolution itself is per-call; "auto" always resolves).
+    name = backend_for_config(cfg.attn_backend, cfg.attn_impl)
+    if name != "auto":
+        get_backend(name)
     if cfg.family == "encdec":
         return Model(
             cfg=cfg,

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.streaming_attention import naive_attention, streaming_attention
+from repro.core.attention_api import attention, backend_for_config
 from repro.models import layers as L
 from repro.models.lm import cross_entropy
 
@@ -38,12 +38,11 @@ def _cross_attn(cfg: ModelConfig, p: Params, x: jax.Array,
     b, l, _ = x.shape
     q = L._heads(L.dense_apply(p["wq"], x), cfg.num_heads)
     scale = cfg.attn_scale if cfg.attn_scale else cfg.d_head ** -0.5
-    attend = (streaming_attention if cfg.attn_impl == "streaming"
-              else naive_attention)
-    out = attend(q, kv["k"], kv["v"], scale=scale, causal=False,
-                 exp_mode=cfg.exp_mode,
-                 **({"block_k": cfg.block_k}
-                    if cfg.attn_impl == "streaming" else {}))
+    out = attention(q, kv["k"], kv["v"],
+                    backend=backend_for_config(cfg.attn_backend,
+                                               cfg.attn_impl),
+                    scale=scale, causal=False, block_k=cfg.block_k,
+                    exp_mode=cfg.exp_mode, fallback=True)
     out = out.transpose(0, 2, 1, 3).reshape(b, l, cfg.num_heads * cfg.d_head)
     return L.dense_apply(p["wo"], out)
 

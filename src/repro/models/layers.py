@@ -5,10 +5,12 @@ Every layer is a pair of functions: ``*_init(key, cfg, ...) -> params`` and
 jnp arrays so they flow through jit / shard_map / checkpointing unchanged and
 sharding rules can be assigned by leaf path (``parallel/sharding.py``).
 
-Attention dispatches to the HASTILY core: ``attn_impl="streaming"`` uses the
-fine-grained-pipelined O(l)-memory path with the LUT exponential
-(``cfg.exp_mode``); ``attn_impl="naive"`` is the materialised-logits baseline
-used for paper A/Bs and as the correctness oracle.
+Attention dispatches through the backend registry (``core/attention_api``):
+``cfg.attn_backend`` names a registered implementation ("jnp", "pallas",
+"ring", "naive") or "auto" to resolve per-call from device platform and call
+shape.  The legacy ``cfg.attn_impl`` field keeps working via
+``backend_for_config``.  The INT8-quantised KV path keeps its dedicated
+entry point (different operand signature).
 """
 from __future__ import annotations
 
@@ -18,9 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.streaming_attention import (naive_attention,
-                                            quantize_kv_rows,
-                                            streaming_attention,
+from repro.core.attention_api import attention, backend_for_config
+from repro.core.streaming_attention import (quantize_kv_rows,
                                             streaming_attention_quantized)
 
 Params = Dict[str, Any]
@@ -261,46 +262,16 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
         kv_len = idx + l
 
     scale = cfg.attn_scale if cfg.attn_scale else cfg.d_head ** -0.5
-    kw = dict(scale=scale, causal=causal and xkv is None, window=window,
-              cap=cfg.attn_softcap, q_offset=q_offset, kv_len=kv_len,
-              kv_pos=kv_pos)
-    if cfg.attn_impl == "pallas" and cache is None and kv_pos is None:
-        # Pallas TPU kernel forward (interpret=True off-TPU) with the jnp
-        # flash backward attached as a custom VJP — kernel on the hot
-        # forward path, autodiff still works for training.  Static lengths
-        # only; cached/dynamic paths use the jnp implementation.
-        from repro.kernels import streaming_attention as pallas_attention
-        kernel_kw = dict(scale=kw["scale"], causal=kw["causal"],
-                         window=window, cap=cfg.attn_softcap,
-                         exp_mode=cfg.exp_mode,
-                         block_q=min(cfg.block_k, 512),
-                         block_k=min(cfg.block_k, 512))
-
-        @jax.custom_vjp
-        def attn(q, k, v):
-            return pallas_attention(q, k, v, **kernel_kw)
-
-        def attn_fwd(q, k, v):
-            return attn(q, k, v), (q, k, v)
-
-        def attn_bwd(res, g):
-            qr, kr, vr = res
-            _, vjp = jax.vjp(
-                lambda a, b, c: streaming_attention(
-                    a, b, c, block_k=cfg.block_k, exp_mode=cfg.exp_mode,
-                    **kw), qr, kr, vr)
-            return vjp(g)
-
-        attn.defvjp(attn_fwd, attn_bwd)
-        out = attn(q, k, v)
-    elif cfg.attn_impl in ("streaming", "pallas") and l > 1:
-        out = streaming_attention(q, k, v, block_k=cfg.block_k,
-                                  exp_mode=cfg.exp_mode, **kw)
-    else:
-        # Single-token decode: the logits row is O(L) already — the KV-block
-        # scan buys nothing and costs a collective-permute per block on a
-        # sharded cache (measured 12 GiB/token at 500k ctx; §Perf pair 3).
-        out = naive_attention(q, k, v, exp_mode=cfg.exp_mode, **kw)
+    # Registry dispatch: fallback=True degrades an explicit backend that
+    # cannot serve this call (e.g. "pallas" on the traced-length cached
+    # decode path) to auto resolution instead of raising mid-trace.
+    out = attention(q, k, v,
+                    backend=backend_for_config(cfg.attn_backend,
+                                               cfg.attn_impl),
+                    scale=scale, causal=causal and xkv is None, window=window,
+                    cap=cfg.attn_softcap, block_k=cfg.block_k,
+                    exp_mode=cfg.exp_mode, q_offset=q_offset, kv_len=kv_len,
+                    kv_pos=kv_pos, fallback=True)
 
     out = out.transpose(0, 2, 1, 3).reshape(b, l, cfg.num_heads * cfg.d_head)
     return dense_apply(p["wo"], out), new_cache

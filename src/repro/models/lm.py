@@ -9,6 +9,10 @@ stay O(period), remat applies per period, and the dry-run scales to 64-layer
 configs.  Layers that don't fill a whole period form an unrolled tail.
 
 All functions are pure; caches are explicit pytrees threaded in and out.
+Attention inside every layer dispatches through the backend registry
+(``core/attention_api``) keyed by ``cfg.attn_backend`` — prefill traces
+resolve to the streaming/Pallas paths, single-token decode to the O(L)
+naive row; no attention implementation is imported here directly.
 """
 from __future__ import annotations
 

@@ -1,0 +1,64 @@
+"""Version-tolerant shims over jax APIs that drifted across 0.4.x → 0.5+.
+
+Three drift points bite this repo (the container pins jax 0.4.37; the code
+was written against newer releases):
+
+- ``jax.shard_map`` is top-level in new jax, ``jax.experimental.shard_map``
+  in 0.4.x;
+- its replication-check kwarg was renamed ``check_rep`` → ``check_vma``;
+- ``jax.make_mesh`` grew an ``axis_types=`` kwarg (with
+  ``jax.sharding.AxisType``) that 0.4.x lacks.
+
+Everything here is a thin forwarding wrapper — import from this module
+instead of hand-rolling try/excepts at each call site.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh
+
+try:  # jax >= 0.4.35 exports shard_map at the top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+try:
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x
+    AxisType = None
+
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+
+def shard_map(f: Optional[Callable] = None, *, mesh: Mesh, in_specs: Any,
+              out_specs: Any, check: bool = True) -> Callable:
+    """``jax.shard_map`` with the check kwarg spelled per installed version.
+
+    Usable directly or as a decorator factory (``f=None``), mirroring the
+    real API.  ``check`` maps to ``check_vma`` (new) / ``check_rep`` (0.4.x).
+    """
+    kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs,
+          _CHECK_KW: check}
+    if f is None:
+        return lambda g: _shard_map(g, **kw)
+    return _shard_map(f, **kw)
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` (new) / ``psum(1, axis)`` (0.4.x) inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where the version supports them."""
+    if AxisType is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))

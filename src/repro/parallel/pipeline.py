@@ -22,7 +22,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.parallel.compat import shard_map
 
 Params = Any
 
@@ -44,7 +45,7 @@ def pipeline_apply(stage_fn: Callable[[Params, jax.Array], jax.Array],
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(p_spec, P()), out_specs=P(),
-        check_vma=False)
+        check=False)
     def run(params, xs):
         params = jax.tree.map(lambda a: a[0], params)   # this stage's slice
         stage = jax.lax.axis_index(axis)

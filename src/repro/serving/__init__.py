@@ -1,3 +1,4 @@
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import (PagedServingEngine, Request, ServingEngine)
+from repro.serving.paged import PagedKVCache
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["PagedKVCache", "PagedServingEngine", "Request", "ServingEngine"]

@@ -1,21 +1,28 @@
-"""Batched serving engine: slot-based continuous batching over KV/SSM caches.
+"""Batched serving engines: continuous batching over KV/SSM caches.
 
-The engine owns B *slots*.  Requests are admitted into free slots (prefill
-writes that slot's cache), and every ``step()`` decodes one token for all
-active slots in a single batched ``decode_step`` — the serving-side
-expression of HASTILY's pipeline: compute never waits for the slowest
-request, finished slots are recycled immediately.
+Two engines share one request lifecycle (submit → admit → batched decode →
+recycle):
 
-Slot mechanics: the model's caches are batched pytrees (leading dim B).
-Prefill runs on a b=1 view and is scattered into the slot index; decode runs
-on the full batch with a *per-slot* position vector via ``jax.vmap`` over
-the single-token step (dynamic_update_slice with per-example indices).
-Sampling: greedy or temperature (per-request).
+``ServingEngine`` — slot-contiguous: B slots, each slot owns a full
+``max_len`` stretch of every cache leaf.  Simple, supports every family
+(SSM states, ring-buffer local windows, INT8 caches), but reserves
+worst-case memory per slot and decodes against ``max_len`` rows always.
+
+``PagedServingEngine`` — block/paged KV (``serving/paged.py``): caches live
+in a page pool with free-list allocation and per-slot page tables; decode
+gathers each slot's pages into a contiguous view sized by the *longest
+active* sequence, not ``max_len``.  The serving-side realisation of
+HASTILY's linear-memory pipelining; restricted to cache layouts where every
+leaf grows with sequence length.
+
+Both engines decode one token for all active slots per ``step()`` — compute
+never waits for the slowest request, finished slots are recycled
+immediately.  Sampling: greedy or temperature (per-request).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import build_model
+from repro.serving.paged import PagedKVCache, cache_batch_axes
 
 
 @dataclasses.dataclass
@@ -37,9 +45,11 @@ class Request:
     done: bool = False
 
 
-class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
-                 max_len: int = 256, seed: int = 0):
+class _EngineBase:
+    """Request lifecycle shared by the slot-contiguous and paged engines."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int,
+                 max_len: int, seed: int):
         self.cfg = cfg
         self.model = build_model(cfg)
         if self.model.decode_step is None:
@@ -48,13 +58,6 @@ class ServingEngine:
         self.slots = slots
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
-        self.caches = self.model.init_cache(slots, max_len)
-        # Per-leaf batch axis: scan-stacked (periods) cache leaves carry the
-        # period dim first, so their batch axis is 1; everything else is 0.
-        self.axes = jax.tree_util.tree_map_with_path(
-            lambda kp, a: 1 if any(str(getattr(k, "key", "")) == "periods"
-                                   for k in kp) else 0,
-            self.caches)
         self.active: List[Optional[Request]] = [None] * slots
         self.pos = np.zeros(slots, np.int64)          # per-slot next index
         self.last_tok = np.zeros(slots, np.int64)
@@ -62,13 +65,64 @@ class ServingEngine:
         self.finished: List[Request] = []
 
         m = self.model
-        axes = self.axes
 
         # b=1 prefill, jitted once per prompt-length bucket
         def prefill_one(params, tokens, caches1):
             logits, caches1 = m.prefill(params, {"tokens": tokens}, caches1)
             return logits, caches1
         self._prefill = jax.jit(prefill_one)
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _sample(self, logits: jax.Array, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, logits / temperature))
+
+    def _finish(self, req: Request) -> None:
+        req.done = True
+        self.finished.append(req)
+
+    @staticmethod
+    def _should_finish(req: Request, tok: int) -> bool:
+        """Completion predicate, shared so both engines stay token-identical."""
+        return (len(req.tokens) >= req.max_new
+                or (req.eos_id is not None and tok == req.eos_id))
+
+    def step(self) -> int:
+        raise NotImplementedError
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self.queue or any(a is not None for a in self.active)):
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("serving did not drain")
+        return self.finished
+
+
+class ServingEngine(_EngineBase):
+    """Slot-contiguous engine: each of B slots owns ``max_len`` cache rows.
+
+    Slot mechanics: the model's caches are batched pytrees (leading dim B).
+    Prefill runs on a b=1 view and is scattered into the slot index; decode
+    runs on the full batch with a *per-slot* position vector via ``jax.vmap``
+    over the single-token step (dynamic_update_slice with per-example
+    indices).
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        super().__init__(cfg, params, slots=slots, max_len=max_len, seed=seed)
+        self.caches = self.model.init_cache(slots, max_len)
+        self.axes = cache_batch_axes(self.caches)
+
+        m = self.model
+        axes = self.axes
 
         # batched single-token decode with per-slot positions
         def decode_all(params, toks, caches, idxs):
@@ -79,11 +133,9 @@ class ServingEngine:
                 return lg[0], c
             return jax.vmap(one, in_axes=(0, axes, 0),
                             out_axes=(0, axes))(toks, caches, idxs)
-        self._decode = jax.jit(decode_all)
-
-    # ------------------------------------------------------------------ API
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        # donate the caches: decode rewrites one row per slot — without
+        # donation every step copies the full (slots × max_len) cache.
+        self._decode = jax.jit(decode_all, donate_argnums=(2,))
 
     def _slot_caches(self, slot: int) -> Any:
         return jax.tree.map(
@@ -111,20 +163,12 @@ class ServingEngine:
             tok = self._sample(logits[0], req.temperature)
             req.tokens.append(int(tok))
             # the prefill's own sample may already satisfy eos/max_new
-            if (len(req.tokens) >= req.max_new
-                    or (req.eos_id is not None and int(tok) == req.eos_id)):
-                req.done = True
-                self.finished.append(req)
+            if self._should_finish(req, int(tok)):
+                self._finish(req)
                 continue
             self.active[slot] = req
             self.pos[slot] = lp
             self.last_tok[slot] = int(tok)
-
-    def _sample(self, logits: jax.Array, temperature: float) -> int:
-        if temperature <= 0.0:
-            return int(jnp.argmax(logits))
-        self.key, sub = jax.random.split(self.key)
-        return int(jax.random.categorical(sub, logits / temperature))
 
     def step(self) -> int:
         """Admit + decode one token for every active slot.  → #active."""
@@ -142,18 +186,129 @@ class ServingEngine:
             req.tokens.append(int(tok))
             self.pos[s] += 1
             self.last_tok[s] = int(tok)
-            hit_eos = req.eos_id is not None and int(tok) == req.eos_id
-            if len(req.tokens) >= req.max_new or hit_eos:
-                req.done = True
-                self.finished.append(req)
+            if self._should_finish(req, int(tok)):
+                self._finish(req)
                 self.active[s] = None           # recycle immediately
         return len(live)
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        steps = 0
-        while (self.queue or any(a is not None for a in self.active)):
-            self.step()
-            steps += 1
-            if steps > max_steps:
-                raise RuntimeError("serving did not drain")
-        return self.finished
+
+class PagedServingEngine(_EngineBase):
+    """Paged-KV engine: page pool + free list + per-slot page tables.
+
+    Admission reserves each request's worst-case page count
+    (ceil((prompt + max_new) / page_size)), so the lazy per-token page
+    allocation during decode can never fail; physical pages are taken from
+    the free list only as the sequence grows and all return on completion.
+    Decode runs over a gathered contiguous view of ``P · page_size`` rows,
+    where P is the page count of the *longest active* sequence rounded up to
+    a power of two (bounds jit retraces); attention masks the padding via
+    ``kv_len``.  Inactive batch lanes are pointed at the pool's scratch page
+    so their (garbage) writes never touch a live page.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 page_size: int = 16, num_pages: int = 64,
+                 max_len: Optional[int] = None, seed: int = 0):
+        max_len = max_len or num_pages * page_size
+        super().__init__(cfg, params, slots=slots, max_len=max_len, seed=seed)
+        self.kv = PagedKVCache(self.model, num_pages, page_size)
+        self.page_tables: List[List[int]] = [[] for _ in range(slots)]
+        self._reserved: List[int] = [0] * slots
+
+        m = self.model
+        kv = self.kv
+        axes = kv.axes
+
+        def decode_paged(params, pool, tbl, toks, idxs):
+            caches = kv.gather(pool, tbl)
+
+            def one(tok, cache, idx):
+                cache1 = jax.tree.map(jnp.expand_dims, cache, axes)
+                lg, c = m.decode_step(params, tok[None], cache1, idx)
+                c = jax.tree.map(jnp.squeeze, c, axes)
+                return lg[0], c
+
+            logits, view = jax.vmap(one, in_axes=(0, axes, 0),
+                                    out_axes=(0, axes))(toks, caches, idxs)
+            page_no = idxs // kv.page_size
+            page_ids = jnp.take_along_axis(tbl, page_no[:, None], 1)[:, 0]
+            pool = kv.scatter_active_page(pool, view, page_ids,
+                                          page_no * kv.page_size)
+            return logits, pool
+
+        # donated pool: the page write-back updates in place instead of
+        # copying the whole pool every step.
+        self._decode = jax.jit(decode_paged, donate_argnums=(1,))
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            lp = len(req.prompt)
+            assert lp + req.max_new <= self.max_len, "prompt too long"
+            need = self.kv.pages_needed(lp + req.max_new)
+            if need > self.kv.num_pages:
+                raise ValueError(
+                    f"request {req.uid} needs {need} pages "
+                    f"(> pool of {self.kv.num_pages}) — raise num_pages")
+            if not self.kv.can_reserve(need):
+                break                      # FIFO: wait for pages to free up
+            self.queue.pop(0)
+            self.kv.reserve(need)
+            n0 = self.kv.pages_needed(lp)
+            fresh = self.model.init_cache(1, n0 * self.kv.page_size)
+            logits, c1 = self._prefill(
+                self.params, jnp.asarray(req.prompt, jnp.int32)[None], fresh)
+            pages = [self.kv.alloc() for _ in range(n0)]
+            self.kv.write_prefill(c1, pages)
+            tok = self._sample(logits[0], req.temperature)
+            req.tokens.append(int(tok))
+            if self._should_finish(req, int(tok)):
+                self.kv.release(pages, need)
+                self._finish(req)
+                continue
+            self.active[slot] = req
+            self.pos[slot] = lp
+            self.last_tok[slot] = int(tok)
+            self.page_tables[slot] = pages
+            self._reserved[slot] = need
+
+    def step(self) -> int:
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        ps = self.kv.page_size
+        for s in live:                       # lazy growth: one page at most
+            if self.pos[s] >= len(self.page_tables[s]) * ps:
+                self.page_tables[s].append(self.kv.alloc())
+        width = max(len(self.page_tables[s]) for s in live)
+        width = 1 << (width - 1).bit_length()          # retrace bucketing
+        tbl = np.full((self.slots, width), self.kv.scratch, np.int32)
+        for s in live:
+            pt = self.page_tables[s]
+            tbl[s, :len(pt)] = pt
+        toks = jnp.asarray(self.last_tok, jnp.int32)
+        idxs = jnp.asarray(
+            [self.pos[s] if self.active[s] is not None else 0
+             for s in range(self.slots)], jnp.int32)
+        logits, self.kv.pool = self._decode(self.params, self.kv.pool,
+                                            jnp.asarray(tbl), toks, idxs)
+        for s in live:
+            req = self.active[s]
+            tok = self._sample(logits[s], req.temperature)
+            req.tokens.append(int(tok))
+            self.pos[s] += 1
+            self.last_tok[s] = int(tok)
+            if self._should_finish(req, int(tok)):
+                self._finish(req)
+                self.active[s] = None
+                self.kv.release(self.page_tables[s], self._reserved[s])
+                self.page_tables[s] = []
+                self._reserved[s] = 0
+        return len(live)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.kv.num_pages - len(self.kv.free)

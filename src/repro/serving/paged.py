@@ -1,0 +1,166 @@
+"""Paged KV cache: fixed-size pages, free-list allocation, per-slot tables.
+
+The slot-contiguous engine reserves ``max_len`` cache rows per slot up front,
+so one long-context slot dictates the memory bill of every short request —
+the serving-side analogue of the O(l²) logit matrix HASTILY streams away.
+Here the resident KV store is a *pool* of fixed-size pages; each sequence
+owns just the pages its current length needs (a page table per slot) and
+decode gathers/attends over ``max(active lengths)`` rows instead of
+``max_len``.  Linear-in-live-tokens memory is the paper's O(l) pipelining
+restated for the cache.
+
+Mechanics
+---------
+- The pool is ``model.init_cache(num_pages + 1, page_size)``: every cache
+  leaf keeps its family layout, with the batch dim reinterpreted as the page
+  id and the length dim as the in-page offset.  Page ``num_pages`` is a
+  scratch page — writes from inactive batch lanes land there.
+- A free list hands out physical pages; admission *reserves* the worst-case
+  page count (ceil((prompt+max_new)/page_size)) so lazy per-token allocation
+  can never deadlock mid-decode, while physical pages are only taken as the
+  sequence actually grows.
+- ``gather`` materialises a per-step contiguous view (B, …, P·page_size, …)
+  from each slot's page table (padded with the scratch page; padding rows are
+  masked by ``kv_len`` inside attention).  ``scatter_active_page`` writes the
+  one page whose rows changed back to the pool — decode touches exactly one
+  row, so the page write-back is the whole diff.
+
+Only cache layouts whose every leaf grows with ``max_len`` are supported
+(standard bf16/f32 and INT8-quantised KV caches).  SSM states are O(1) per
+slot (nothing to page) and ring-buffer sliding-window caches are already
+O(window); both are rejected at construction with a clear error.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def cache_batch_axes(tree: Pytree) -> Pytree:
+    """Per-leaf batch axis of a model cache pytree.
+
+    Scan-stacked (``periods``) cache leaves carry the period dim first, so
+    their batch axis is 1; everything else is 0.  Shared by both serving
+    engines and the page pool (where "batch" is the page id).
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, a: 1 if any(str(getattr(k, "key", "")) == "periods"
+                               for k in kp) else 0,
+        tree)
+
+
+class PagedKVCache:
+    """Page pool + free list over a model's cache pytree (see module doc)."""
+
+    def __init__(self, model, num_pages: int, page_size: int):
+        self.model = model
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.scratch = num_pages                    # sink page for idle lanes
+        self.pool = model.init_cache(num_pages + 1, page_size)
+        self.axes = cache_batch_axes(self.pool)   # page id plays batch here
+        # Length axis per leaf, discovered by growing max_len: paging is only
+        # sound if every leaf scales with it (k/v rows, quant scales, …).
+        small = jax.eval_shape(lambda: model.init_cache(1, page_size))
+        big = jax.eval_shape(lambda: model.init_cache(1, 2 * page_size))
+        if (jax.tree_util.tree_structure(small)
+                != jax.tree_util.tree_structure(big)):
+            raise ValueError(
+                f"paged KV cache: {model.cfg.name} cache *structure* changes "
+                f"with max_len (e.g. ring-buffer local windows appearing "
+                f"around page_size={page_size}) — serve this config with the "
+                f"slot-contiguous engine")
+        def length_axis(kp, a, b, ax):
+            diff = [i for i, (da, db) in enumerate(zip(a.shape, b.shape))
+                    if da != db]
+            if diff != [ax + 2] or b.shape[ax + 2] != 2 * a.shape[ax + 2]:
+                path = jax.tree_util.keystr(kp)
+                raise ValueError(
+                    f"paged KV cache: leaf {path} (shape {a.shape}) does not "
+                    f"scale with max_len on axis {ax + 2} — SSM states and "
+                    f"ring-buffer sliding-window caches are not pageable; "
+                    f"serve this config with the slot-contiguous engine")
+            return ax + 2
+        self.laxes = jax.tree_util.tree_map_with_path(
+            length_axis, small, big, self.axes)
+        self.free: List[int] = list(range(num_pages))
+        self.reserved = 0
+
+        def write(pool, caches1, ids):
+            n, ps = ids.shape[0], self.page_size
+
+            def wr(pl, one, ax, lax):
+                s = one.shape
+                assert s[ax] == 1 and s[lax] == n * ps, (s, ax, lax)
+                one = one.reshape(s[:lax] + (n, ps) + s[lax + 1:])
+                one = jnp.squeeze(one, ax)          # page axis now at lax-1
+                one = jnp.moveaxis(one, lax - 1, ax)
+                return pl.at[(slice(None),) * ax + (ids,)].set(
+                    one.astype(pl.dtype))
+
+            return jax.tree.map(wr, pool, caches1, self.axes, self.laxes)
+
+        # donated pool: admission writes n0 pages in place instead of eagerly
+        # copying the whole pool once per cache leaf (retraces per page count,
+        # like the per-length prefill buckets).
+        self._write = jax.jit(write, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ free list
+    def pages_needed(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def can_reserve(self, n: int) -> bool:
+        return self.reserved + n <= self.num_pages
+
+    def reserve(self, n: int) -> None:
+        assert self.can_reserve(n), (n, self.reserved, self.num_pages)
+        self.reserved += n
+
+    def alloc(self) -> int:
+        # Reservations guarantee this pop never fails mid-decode.
+        return self.free.pop()
+
+    def release(self, pages: List[int], reserved: int) -> None:
+        self.free.extend(pages)
+        self.reserved -= reserved
+
+    # ------------------------------------------------------------- pool ops
+    def write_prefill(self, caches1: Pytree, pages: List[int]) -> None:
+        """Scatter a b=1 contiguous prefill cache (length n·ps) into pages."""
+        self.pool = self._write(self.pool, caches1,
+                                jnp.asarray(pages, jnp.int32))
+
+    def gather(self, pool: Pytree, tbl: jax.Array) -> Pytree:
+        """Page tables (B, P) → contiguous view caches (B, …, P·ps, …)."""
+        def g(leaf, ax, lax):
+            out = jnp.take(leaf, tbl, axis=ax)      # B,P inserted at ax
+            out = jnp.moveaxis(out, ax + 1, lax)    # P next to in-page offset
+            s = out.shape
+            return out.reshape(s[:lax] + (s[lax] * s[lax + 1],) + s[lax + 2:])
+        return jax.tree.map(g, pool, self.axes, self.laxes)
+
+    def scatter_active_page(self, pool: Pytree, view: Pytree,
+                            page_ids: jax.Array, page_start: jax.Array
+                            ) -> Pytree:
+        """Write each lane's currently-written page from ``view`` back.
+
+        ``page_ids`` (B,) physical target page per lane (scratch for idle
+        lanes); ``page_start`` (B,) the page's first row in view coords.
+        Decode mutates a single row, so one page per lane is the whole diff.
+        """
+        ps = self.page_size
+        rows = page_start[:, None] + jnp.arange(ps, dtype=jnp.int32)  # (B,ps)
+
+        def sc(pl, g, ax, lax):
+            # rows (B, ps) → index of g.ndim with B at ax, ps at lax (ax<lax,
+            # so a plain reshape preserves the B-major/ps-minor order).
+            shape = [1] * g.ndim
+            shape[ax], shape[lax] = rows.shape[0], ps
+            page = jnp.take_along_axis(g, rows.reshape(shape), axis=lax)
+            return pl.at[(slice(None),) * ax + (page_ids,)].set(page)
+
+        return jax.tree.map(sc, pool, view, self.axes, self.laxes)

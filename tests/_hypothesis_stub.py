@@ -1,0 +1,104 @@
+"""Deterministic fallback for the tiny slice of `hypothesis` this suite uses.
+
+The CI image does not always ship `hypothesis`; rather than skip the property
+tests wholesale, this module re-implements the used surface — ``given``,
+``settings``, ``strategies.floats/integers/sampled_from`` and
+``hypothesis.extra.numpy.arrays`` — as a seeded example sampler.  Real
+hypothesis, when installed, is always preferred (see the try/except import in
+each test module); this stub trades shrinking/coverage smarts for zero deps
+while keeping every property exercised on a few dozen deterministic examples,
+including interval endpoints.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Callable, List
+
+import numpy as np
+
+_MAX_EXAMPLES_CAP = 50  # CPU-CI budget; hypothesis proper runs the full count
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[np.random.Generator], Any],
+                 endpoints: List[Any] = ()):  # noqa: B006 - immutable default
+        self._sample = sample
+        self.endpoints = list(endpoints)
+
+    def example(self, rng: np.random.Generator) -> Any:
+        return self._sample(rng)
+
+
+def floats(min_value: float = -1e9, max_value: float = 1e9, *,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           width: int = 64, **_: Any) -> _Strategy:
+    lo, hi = float(min_value), float(max_value)
+
+    def sample(rng):
+        x = float(rng.uniform(lo, hi))
+        return float(np.float32(x)) if width == 32 else x
+
+    return _Strategy(sample, endpoints=[lo, hi, 0.0] if lo <= 0.0 <= hi
+                     else [lo, hi])
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)),
+                     endpoints=[min_value, max_value])
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[int(rng.integers(len(items)))],
+                     endpoints=items[:2])
+
+
+class st:  # mirrors `hypothesis.strategies`
+    floats = staticmethod(floats)
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+
+
+class hnp:  # mirrors `hypothesis.extra.numpy`
+    @staticmethod
+    def arrays(dtype, shape, *, elements: _Strategy, **_: Any) -> _Strategy:
+        shape = tuple(shape) if not isinstance(shape, int) else (shape,)
+
+        def sample(rng):
+            flat = [elements.example(rng) for _ in range(int(np.prod(shape)))]
+            return np.asarray(flat, dtype=dtype).reshape(shape)
+
+        return _Strategy(sample)
+
+
+def settings(max_examples: int = 20, deadline=None, **_: Any):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    """Run the wrapped test on endpoint examples + seeded random samples."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_max_examples", 20), _MAX_EXAMPLES_CAP)
+            rng = np.random.default_rng(0)
+            cases = []
+            if all(s.endpoints for s in strategies):
+                width = max(len(s.endpoints) for s in strategies)
+                for i in range(width):
+                    cases.append(tuple(s.endpoints[i % len(s.endpoints)]
+                                       for s in strategies))
+            while len(cases) < n:
+                cases.append(tuple(s.example(rng) for s in strategies))
+            for vals in cases[:n]:
+                fn(*args, *vals, **kwargs)
+        # All params are strategy-bound: hide them from pytest's fixture
+        # resolution (real hypothesis does the same).
+        wrapper.__signature__ = inspect.Signature()
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

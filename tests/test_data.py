@@ -1,7 +1,10 @@
 """Data pipeline: determinism, sharding partition, learnable structure."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI image without hypothesis: seeded fallback
+    from tests._hypothesis_stub import given, settings, st
 
 from repro.data import DataConfig, TokenPipeline, host_shard
 

@@ -56,11 +56,10 @@ def test_real_lowered_psum_counted():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, functools
         from jax.sharding import PartitionSpec as P
-        from jax.experimental.shard_map import shard_map
+        from repro.parallel.compat import make_mesh, shard_map
         from repro.launch.hlo_analysis import collective_totals
 
-        mesh = jax.make_mesh((4,), ("m",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("m",))
         f = shard_map(lambda x: jax.lax.psum(x, "m"),
                       mesh=mesh, in_specs=P("m"), out_specs=P())
         hlo = jax.jit(f).lower(jnp.zeros((64,), jnp.float32)).compile().as_text()

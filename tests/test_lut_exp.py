@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI image without hypothesis: seeded fallback
+    from tests._hypothesis_stub import given, settings, st
 
 from repro.core.lut_exp import (K, LN2, decompose, lut_exp, lut_exp2,
                                 make_table, pow2_int)

@@ -6,13 +6,12 @@ def test_sharded_softmax_matches_full():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np, functools
         from jax.sharding import Mesh, PartitionSpec as P
-        from jax.experimental.shard_map import shard_map
+        from repro.parallel.compat import make_mesh, shard_map
         from repro.core.multicore_softmax import (sharded_softmax,
                                                   sharded_softmax_tree)
         from repro.core.lut_softmax import lut_softmax
 
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32) * 5)
 
@@ -39,11 +38,10 @@ def test_tree_allreduce_is_logn():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, functools
         from jax.sharding import PartitionSpec as P
-        from jax.experimental.shard_map import shard_map
+        from repro.parallel.compat import make_mesh, shard_map
         from repro.core.multicore_softmax import tree_allreduce
 
-        mesh = jax.make_mesh((8,), ("m",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("m",))
         f = shard_map(
             lambda x: tree_allreduce(x, jnp.add, "m"),
             mesh=mesh, in_specs=P("m"), out_specs=P("m"))

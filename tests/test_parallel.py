@@ -8,16 +8,15 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import ASSIGNED, get_config
 from repro.models import build_model
 from repro.parallel import fit_spec, param_pspec, param_specs
+from repro.parallel.compat import make_mesh
 from tests._multidevice import run_with_devices
 
 
 # ------------------------------------------------------------- fit_spec --
 
 def test_fit_spec_basic():
-    import os
     # single-device mesh: every axis has size 1 → everything fits
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     assert fit_spec(("fsdp", "tp"), (16, 32), mesh) == P("data", "model")
     assert fit_spec(("dp", None), (3, 7), mesh) == P("data", None)
 
@@ -31,10 +30,10 @@ def test_param_specs_always_divisible():
         from repro.models import build_model, input_specs
         from repro.parallel import param_specs, batch_specs, cache_specs
         from repro.launch.mesh import make_production_mesh
+        from repro.parallel.compat import make_mesh
 
         # 16-device stand-in mesh with the production axis names
-        mesh = jax.make_mesh((4, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 4), ("data", "model"))
 
         def check(tree, specs):
             leaves = jax.tree_util.tree_leaves_with_path(tree)
@@ -62,8 +61,7 @@ def test_param_specs_always_divisible():
 
 
 def test_param_pspec_rules():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     assert param_pspec("trunk/periods/0/attn/wq/w", (4, 64, 64), mesh) \
         == P(None, "data", "model")
     assert param_pspec("embed/tokens", (512, 64), mesh) == P("model", "data")
@@ -79,8 +77,8 @@ def test_pipeline_parallel_matches_sequential():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.parallel import pipeline_apply
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.parallel.compat import make_mesh
+        mesh = make_mesh((4,), ("pod",))
         rng = np.random.default_rng(0)
         S, M, mb, d = 4, 6, 3, 8
         ws = jnp.asarray(rng.normal(size=(S, d, d)).astype(np.float32) * 0.3)
@@ -110,6 +108,7 @@ def test_sharded_train_step_matches_single():
         from repro.models import build_model
         from repro.parallel import (param_specs, batch_specs, shard_tree,
                                     activation_sharding)
+        from repro.parallel.compat import make_mesh
 
         cfg = get_config("deepseek-7b-smoke")
         model = build_model(cfg)
@@ -120,8 +119,7 @@ def test_sharded_train_step_matches_single():
         batch["labels"] = batch["tokens"]
         loss_single, _ = model.loss(params, batch)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         pspecs = param_specs(params, mesh)
         sparams = shard_tree(params, pspecs, mesh)
         bspecs = batch_specs(batch, mesh)

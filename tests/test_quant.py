@@ -1,8 +1,11 @@
 """INT8 quantisation substrate (paper §V) — properties and bounds."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+except ImportError:  # CI image without hypothesis: seeded fallback
+    from tests._hypothesis_stub import given, settings, st, hnp
 
 from repro.core.quant import (QTensor, dense_maybe_quant, int8_matmul,
                               quantize, quantize_dynamic)

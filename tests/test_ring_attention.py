@@ -6,12 +6,11 @@ def test_ring_attention_matches_naive():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np, functools
         from jax.sharding import PartitionSpec as P
-        from jax.experimental.shard_map import shard_map
+        from repro.parallel.compat import make_mesh, shard_map
         from repro.core.ring_attention import ring_attention
         from repro.core.streaming_attention import naive_attention
 
-        mesh = jax.make_mesh((4,), ("sp",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("sp",))
         rng = np.random.default_rng(0)
         B, Hq, Hkv, L, D = 2, 4, 2, 64, 16
         q = jnp.asarray(rng.normal(size=(B, Hq, L, D)).astype(np.float32))
@@ -38,12 +37,11 @@ def test_distributed_decode_matches_naive():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np, functools
         from jax.sharding import PartitionSpec as P
-        from jax.experimental.shard_map import shard_map
+        from repro.parallel.compat import make_mesh, shard_map
         from repro.core.ring_attention import distributed_decode_attention
         from repro.core.streaming_attention import naive_attention
 
-        mesh = jax.make_mesh((8,), ("sp",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("sp",))
         rng = np.random.default_rng(1)
         B, Hq, Hkv, L, D = 2, 4, 4, 128, 16
         kv_len = 100
