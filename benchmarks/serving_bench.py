@@ -1,98 +1,331 @@
-"""Serving throughput: slot-contiguous vs paged KV cache at mixed lengths.
+"""Serving benchmarks: slot vs paged engines + the in-place decode A/B.
 
-Both engines get the SAME resident-KV budget (total cache rows) and the same
-mixed traffic — a couple of long generations among many short ones.  The
-slot engine must size every slot for the longest request it may host, so the
-budget buys ``budget // max_len`` concurrent lanes; the paged engine spends
-rows page-by-page as sequences actually grow, so the same budget sustains
-far more concurrent short requests while a long one is resident.  Decode
-throughput then follows concurrency — this is the serving-side restatement
-of HASTILY's O(l)-not-O(l_max) memory claim.
+Three families, all emitted as CSV rows (``benchmarks.run``) *and* as a
+machine-readable ``BENCH_serving.json`` so the perf trajectory is tracked
+across PRs:
 
-A second pair of rows reports per-engine *step width* (rows attended per
-decode step): the paged view is sized by the longest active sequence, the
-slot view by ``max_len`` always.
+1. **Engine throughput** — slot-contiguous vs paged KV at the SAME
+   resident-KV budget under mixed traffic (a couple of long prompts among
+   many short ones).  The slot engine sizes every lane for the longest
+   request; the paged engine spends rows page-by-page, so the same budget
+   sustains more concurrent lanes.  Per-step decode latency (p50/p95) and
+   peak resident cache rows are recorded per engine.
 
-CPU numbers are relative A/B signals, not TPU claims (see docs/benchmarks.md).
+2. **Step breakdown** — the PR-1 gather path vs the in-place paged path at
+   equal row budget, one attention layer, same pool/table/occupancy:
+
+   - legacy: gather the contiguous (B, Hkv, W·ps, D) view from the page
+     table, attend over it per lane, write the active page back — the
+     per-step O(B·H·L·D) copy the in-place kernel deleted;
+   - in-place: write each lane's one new KV row at its (page, offset) and
+     attend through the table (``kernels/paged_attention``) — no copy.
+
+   Component timings (gather / attend / write-back) show where the legacy
+   milliseconds went and that the live step is attend-dominated.
+
+CPU numbers are relative A/B signals, not TPU claims (docs/benchmarks.md).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
-from typing import Iterator, List, Tuple
+from typing import Any, Dict, Iterator, List, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 Row = Tuple[str, float, str]
 
-_PAGE = 16
-_MAX_LEN = 1024                      # serving SLA: longest hostable request
-_BUDGET_ROWS = 4 * _MAX_LEN          # resident-KV budget for both engines
+_JSON_DEFAULT = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
 
 
-def _mixed_requests(vocab: int, seed: int = 7):
+# --------------------------------------------------------------- utilities --
+
+def _time_ms(fn, *args, iters: int = 10) -> float:
+    """Best-of-N wall-clock ms of ``fn(*args)`` after a compile warm-up
+    (min, not median: these shapes run multi-threaded and the best sample
+    is the least contended one)."""
+    jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e3)
+    return float(np.min(samples))
+
+
+def _time_state_ms(fn, state, iters: int = 10) -> Tuple[float, Any]:
+    """Best-of-N ms of a donating state → state step, chained like a real
+    decode loop (donation keeps pool updates in place where the backend
+    supports aliasing; XLA:CPU copies regardless — both write paths pay
+    that copy equally, see the JSON note)."""
+    state = fn(*state)                      # compile + warm
+    jax.block_until_ready(state)
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        state = fn(*state)
+        jax.block_until_ready(state)
+        samples.append((time.perf_counter() - t0) * 1e3)
+    return float(np.min(samples)), state
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+# ------------------------------------------------------- engine throughput --
+
+def _mixed_requests(vocab: int, tiny: bool, seed: int = 7):
     """Many short requests + two long-prompt ones.
 
     The long prompts (not long generations) force the slot engine's
-    ``max_len`` up — every lane reserves _MAX_LEN (1024) rows so such
-    requests can land anywhere — while the paged engine spends the 25 pages
-    a 384+8-row sequence actually needs, only while it is resident.  All
-    generations are short, so drain time is set by queueing (lanes), not by
-    one long tail.
+    ``max_len`` up — every lane reserves the worst case so such requests can
+    land anywhere — while the paged engine spends only the pages the long
+    sequence actually needs, only while it is resident.
     """
     from repro.serving import Request
     rng = np.random.default_rng(seed)
-    prompts: List[int] = [4 + (i % 3) * 2 for i in range(48)] + [384, 384]
+    if tiny:
+        prompts: List[int] = [4 + (i % 3) * 2 for i in range(10)] + [48]
+    else:
+        prompts = [4 + (i % 3) * 2 for i in range(48)] + [384, 384]
     return [Request(uid=i, prompt=rng.integers(0, vocab, lp
                                                ).astype(np.int32), max_new=8)
             for i, lp in enumerate(prompts)]
 
 
-def _drain_tok_s(engine, requests) -> Tuple[float, int]:
+def _instrumented_drain(engine, requests, rows_in_use) -> Dict[str, Any]:
+    """Drain traffic, timing every decode step and tracking cache pressure."""
     for r in requests:
         engine.submit(r)
+    lat: List[float] = []
+    peak_rows = 0
+    steps = 0
     t0 = time.perf_counter()
-    done = list(engine.run())
+    while engine.queue or any(a is not None for a in engine.active):
+        s0 = time.perf_counter()
+        engine.step()
+        lat.append((time.perf_counter() - s0) * 1e3)
+        peak_rows = max(peak_rows, rows_in_use(engine))
+        steps += 1
+        if steps > 10_000:
+            raise RuntimeError("serving did not drain")
     dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in engine.finished)
     engine.finished.clear()             # engine is reused across passes
-    toks = sum(len(r.tokens) for r in done)
-    return toks / dt, toks
+    return {"tok_s": toks / dt, "tokens": toks, "steps": steps,
+            "step_ms_p50": _pct(lat, 50), "step_ms_p95": _pct(lat, 95),
+            "peak_cache_rows": int(peak_rows)}
 
 
-def bench_paged_serving() -> Iterator[Row]:
+def _engine_results(tiny: bool) -> Dict[str, Any]:
     from repro.configs import get_config
     from repro.models import build_model
     from repro.serving import PagedServingEngine, ServingEngine
+
+    page = 8 if tiny else 16
+    max_len = 128 if tiny else 1024          # serving SLA: longest request
+    budget_rows = (2 if tiny else 4) * max_len    # resident-KV budget
     cfg = get_config("deepseek-7b-smoke")
     params = build_model(cfg).init(jax.random.PRNGKey(0))
 
-    slot_lanes = _BUDGET_ROWS // _MAX_LEN          # 4 lanes of 1024 rows
-    paged_lanes = 16                               # page pool spreads wider
-    num_pages = _BUDGET_ROWS // _PAGE
+    slot_lanes = budget_rows // max_len
+    paged_lanes = 4 if tiny else 16          # page pool spreads wider
+    num_pages = budget_rows // page
 
-    # Engines are REUSED across passes: pass 1-2 warm the jit caches
-    # (per-width decode buckets, per-length prefill buckets), pass 3 is the
-    # steady-state measurement a long-running server actually sees.
-    slot_eng = ServingEngine(cfg, params, slots=slot_lanes, max_len=_MAX_LEN)
+    # Engines are REUSED across passes: early passes warm the jit caches
+    # (per-width decode buckets, per-length prefill buckets), the last pass
+    # is the steady state a long-running server actually sees.
+    slot_eng = ServingEngine(cfg, params, slots=slot_lanes, max_len=max_len)
     paged_eng = PagedServingEngine(cfg, params, slots=paged_lanes,
-                                   page_size=_PAGE, num_pages=num_pages,
-                                   max_len=_MAX_LEN)
-    for _ in range(3):
-        slot_tok_s, n = _drain_tok_s(slot_eng, _mixed_requests(cfg.vocab_size))
-        paged_tok_s, _ = _drain_tok_s(paged_eng,
-                                      _mixed_requests(cfg.vocab_size))
+                                   page_size=page, num_pages=num_pages,
+                                   max_len=max_len)
+    for _ in range(2 if tiny else 3):
+        slot = _instrumented_drain(
+            slot_eng, _mixed_requests(cfg.vocab_size, tiny),
+            lambda e: e.slots * e.max_len)
+        paged = _instrumented_drain(
+            paged_eng, _mixed_requests(cfg.vocab_size, tiny),
+            lambda e: e.pages_in_use * e.kv.page_size)
 
-    yield ("serving/slot_contiguous_tok_s", slot_tok_s,
-           f"{n} toks; {slot_lanes} lanes x {_MAX_LEN} rows = budget")
-    yield ("serving/paged_tok_s", paged_tok_s,
-           f"same budget as {num_pages} x {_PAGE}-row pages; "
-           f"{paged_lanes} lanes")
-    yield ("serving/paged_speedup", paged_tok_s / slot_tok_s,
+    slot["lanes"], paged["lanes"] = slot_lanes, paged_lanes
+    return {"budget_rows": budget_rows, "page_size": page,
+            "num_pages": num_pages, "max_len": max_len,
+            "slot": slot, "paged": paged,
+            "speedup": paged["tok_s"] / slot["tok_s"]}
+
+
+# --------------------------------------------------------- step breakdown --
+
+def _breakdown_results(tiny: bool) -> Dict[str, Any]:
+    """Gather-path vs in-place decode step at equal row budget (1 layer)."""
+    from repro.core.streaming_attention import naive_attention
+    from repro.kernels.paged_attention import paged_attention
+
+    if tiny:
+        b, hq, hkv, d, ps, w = 2, 4, 2, 32, 8, 4
+    else:
+        # Memory-bound regime (the serving-relevant one): the gathered
+        # (B, Hkv, W·ps, D) views are ~17 MB per pool — far beyond cache —
+        # so the legacy copy costs real bandwidth every step.
+        b, hq, hkv, d, ps, w = 32, 8, 2, 128, 16, 64
+    n = b * w + 1                            # every lane fully grown
+    rng = np.random.default_rng(0)
+    kp = jnp.asarray(rng.normal(size=(n, hkv, ps, d)), jnp.bfloat16)
+    vp = jnp.asarray(rng.normal(size=(n, hkv, ps, d)), jnp.bfloat16)
+    q = jnp.asarray(rng.normal(size=(b, hq, 1, d)).astype(np.float32))
+    newk = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.bfloat16)
+    newv = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.bfloat16)
+    tbl = jnp.asarray(
+        np.stack([rng.permutation(n - 1)[:w] for _ in range(b)]), jnp.int32)
+    idxs = jnp.asarray(rng.integers(ps * (w - 1), ps * w, size=b), jnp.int32)
+
+    def gather(pool):
+        out = jnp.moveaxis(jnp.take(pool, tbl, axis=0), 1, 2)
+        s = out.shape
+        return out.reshape(s[0], s[1], s[2] * s[3], *s[4:])
+
+    def writeback_page(pool, view):          # one whole page per lane
+        page_no = idxs // ps
+        page_ids = jnp.take_along_axis(tbl, page_no[:, None], 1)[:, 0]
+        rows = page_no[:, None] * ps + jnp.arange(ps)[None, :]
+        page = jnp.take_along_axis(
+            view, rows[:, None, :, None], axis=2).astype(pool.dtype)
+        return pool.at[page_ids].set(jnp.moveaxis(page, 1, 2)
+                                     .reshape(b, ps, hkv, d)
+                                     .transpose(0, 2, 1, 3))
+
+    def write_row(kp, vp):                   # one row per lane
+        page_ids = jnp.take_along_axis(tbl, (idxs // ps)[:, None], 1)[:, 0]
+        off = idxs % ps
+        return (kp.at[page_ids, :, off].set(newk.astype(kp.dtype)),
+                vp.at[page_ids, :, off].set(newv.astype(vp.dtype)))
+
+    def attend_view(kg, vg):                 # per-lane view attention (PR 1)
+        return jax.vmap(
+            lambda qb, kb, vb, i: naive_attention(
+                qb[None], kb[None], vb[None], causal=True,
+                q_offset=i, kv_len=i + 1)[0])(q, kg, vg, idxs)
+
+    # Attention paths, each jitted whole so XLA fuses what it can — the
+    # legacy arm is PR 1's real dataflow (gather feeding the view attend).
+    legacy_gather = jax.jit(lambda kp, vp: (gather(kp), gather(vp)))
+    legacy_attend_path = jax.jit(
+        lambda kp, vp: attend_view(gather(kp), gather(vp)))
+    inplace_attend_path = jax.jit(
+        lambda kp, vp: paged_attention(q, kp, vp, tbl, idxs + 1))
+
+    # Pool writers: donated + chained like the engine's decode loop.  The
+    # legacy arm writes BOTH pools' active page (PR 1's scatter_active_page
+    # covered every cache leaf), matching the in-place arm's k+v row writes.
+    j_writeback = jax.jit(
+        lambda kp, vp, kg, vg: (writeback_page(kp, kg),
+                                writeback_page(vp, vg)),
+        donate_argnums=(0, 1))
+    j_write_row = jax.jit(write_row, donate_argnums=(0, 1))
+
+    kg, vg = legacy_gather(kp, vp)
+    iters = 5 if tiny else 30
+    out = {
+        "shape": {"lanes": b, "heads_q": hq, "heads_kv": hkv, "d_head": d,
+                  "page_size": ps, "pages_per_lane": w,
+                  "rows_per_lane": ps * w},
+        "note": "write paths both pay a full pool copy on XLA:CPU (no "
+                "scatter aliasing there even under donation); on TPU the "
+                "row write is strictly less traffic than the page "
+                "write-back.  The attend path is the PR's hot-path delta.",
+        # pure reads first — the donating chain below consumes the pools
+        "legacy_gather_ms": _time_ms(legacy_gather, kp, vp, iters=iters),
+        "legacy_attend_path_ms": _time_ms(legacy_attend_path, kp, vp,
+                                          iters=iters),
+        "attend_in_place_ms": _time_ms(inplace_attend_path, kp, vp,
+                                       iters=iters),
+    }
+    wb_ms, (kp, vp) = _time_state_ms(
+        lambda kp_, vp_: j_writeback(kp_, vp_, kg, vg), (kp, vp),
+        iters=iters)
+    row_ms, _ = _time_state_ms(j_write_row, (kp, vp), iters=iters)
+    out.update(
+        legacy_writeback_page_ms=wb_ms, write_row_ms=row_ms,
+        attend_speedup=out["legacy_attend_path_ms"]
+        / out["attend_in_place_ms"],
+        step_speedup=(out["legacy_attend_path_ms"] + wb_ms)
+        / (out["attend_in_place_ms"] + row_ms))
+    return out
+
+
+# ----------------------------------------------------------------- driver --
+
+def run_serving(tiny: bool = False) -> Dict[str, Any]:
+    return {"meta": {"platform": jax.default_backend(), "tiny": tiny,
+                     "config": "deepseek-7b-smoke"},
+            "engines": _engine_results(tiny),
+            "step_breakdown": _breakdown_results(tiny)}
+
+
+def write_json(results: Dict[str, Any], path: str = _JSON_DEFAULT) -> None:
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
+    e, bd = results["engines"], results["step_breakdown"]
+    yield ("serving/slot_contiguous_tok_s", e["slot"]["tok_s"],
+           f"{e['slot']['tokens']} toks; {e['slot']['lanes']} lanes x "
+           f"{e['max_len']} rows = budget")
+    yield ("serving/paged_tok_s", e["paged"]["tok_s"],
+           f"same budget as {e['num_pages']} x {e['page_size']}-row pages; "
+           f"{e['paged']['lanes']} lanes")
+    yield ("serving/paged_speedup", e["speedup"],
            "equal-memory mixed-length traffic; >1 means paging pays")
-    yield ("serving/slot_step_rows", float(_MAX_LEN),
-           "rows attended per decode step (always max_len)")
-    yield ("serving/paged_step_rows_max", float(_PAGE * 32),
-           "upper bound: longest active seq (392 rows) -> 32-page view")
+    yield ("serving/paged_step_ms_p50", e["paged"]["step_ms_p50"],
+           "decode step latency, in-place paged path")
+    yield ("serving/paged_peak_cache_rows", float(e["paged"]["peak_cache_rows"]),
+           f"resident rows at peak (slot engine: "
+           f"{e['slot']['peak_cache_rows']} always)")
+    yield ("serving/step_legacy_gather_ms", bd["legacy_gather_ms"],
+           "the per-step copy the in-place kernel deleted")
+    yield ("serving/step_attend_in_place_ms", bd["attend_in_place_ms"],
+           "paged attention through the table (live step, dominant)")
+    yield ("serving/step_write_row_ms", bd["write_row_ms"],
+           "single-row pool write (live step)")
+    yield ("serving/attend_speedup_vs_gather_path", bd["attend_speedup"],
+           f"legacy gather+attend {bd['legacy_attend_path_ms']:.3g} ms -> "
+           f"in-place {bd['attend_in_place_ms']:.3g} ms at "
+           f"{bd['shape']['rows_per_lane']} rows/lane")
+    yield ("serving/step_speedup_vs_gather_path", bd["step_speedup"],
+           "attend+write vs PR 1 gather+attend+page-writeback")
+
+
+def bench_paged_serving() -> Iterator[Row]:
+    results = run_serving()
+    write_json(results)                 # benchmarks.run refreshes the JSON
+    yield from rows_from(results)
 
 
 ALL_SERVING = (bench_paged_serving,)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="serving benchmarks -> CSV rows + BENCH_serving.json")
+    ap.add_argument("--json", default=_JSON_DEFAULT,
+                    help="output path for the JSON results")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI scale: small pools/traffic, crash-test numbers")
+    args = ap.parse_args()
+    results = run_serving(tiny=args.tiny)
+    write_json(results, args.json)
+    print("name,value,derived")
+    for name, value, note in rows_from(results):
+        print(f"{name},{value:.6g},{note}")
+    print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

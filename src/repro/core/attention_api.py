@@ -47,6 +47,7 @@ class AttentionCall:
     static_lengths: bool          # q_offset / kv_len are python ints (or None)
     has_kv_pos: bool              # ring-buffer position table supplied
     inside_shard_map: bool        # an axis_name was supplied
+    has_page_table: bool = False  # k/v are page pools + a (B, P) page table
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,9 +62,10 @@ class BackendSpec:
 _REGISTRY: Dict[str, BackendSpec] = {}
 
 #: resolution order for ``backend="auto"`` — first auto-eligible backend wins.
-#: "ring" is only eligible inside shard_map, "naive" is the last resort.
-_AUTO_ORDER: Tuple[str, ...] = ("pallas", "naive_decode", "jnp", "ring",
-                                "naive")
+#: "paged" is the only backend that reads page pools, "ring" is only eligible
+#: inside shard_map, "naive" is the last resort.
+_AUTO_ORDER: Tuple[str, ...] = ("paged", "pallas", "naive_decode", "jnp",
+                                "ring", "naive")
 
 
 def register_backend(name: str, *, supports: Callable[[AttentionCall], bool],
@@ -124,14 +126,15 @@ def _is_static(x) -> bool:
 
 
 def describe_call(q, k, *, q_offset=0, kv_len=None, kv_pos=None,
-                  axis_name: Optional[str] = None,
+                  page_table=None, axis_name: Optional[str] = None,
                   platform: Optional[str] = None) -> AttentionCall:
     return AttentionCall(
         lq=q.shape[2], lkv=k.shape[2],
         platform=platform or jax.default_backend(),
         static_lengths=_is_static(q_offset) and _is_static(kv_len),
         has_kv_pos=kv_pos is not None,
-        inside_shard_map=axis_name is not None)
+        inside_shard_map=axis_name is not None,
+        has_page_table=page_table is not None)
 
 
 def resolve_backend(backend: str, call: AttentionCall, *,
@@ -170,6 +173,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               q_offset: jax.Array | int = 0,
               kv_len: Optional[jax.Array | int] = None,
               kv_pos: Optional[jax.Array] = None,
+              page_table: Optional[jax.Array] = None,
               axis_name: Optional[str] = None,
               fallback: bool = False) -> jax.Array:
     """The single attention entry point (see module docstring).
@@ -179,13 +183,21 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     decode, the streaming jnp scan otherwise.  Pass a registered name to pin
     an implementation (tests pin ``"naive"`` as the oracle); an unsupported
     explicit choice raises unless ``fallback=True`` (the model path).
+
+    ``page_table`` switches the calling convention to *paged*: k/v are page
+    pools ``(num_pages, Hkv, page_size, D)``, ``page_table`` is the (B, P)
+    physical page per table slot and ``kv_len`` the (B,) live rows per lane.
+    Only backends whose ``supports`` accepts pool+page-table callers (the
+    "paged" kernel) resolve; contiguous backends never see the kwarg.
     """
     call = describe_call(q, k, q_offset=q_offset, kv_len=kv_len, kv_pos=kv_pos,
-                         axis_name=axis_name)
+                         page_table=page_table, axis_name=axis_name)
     spec = resolve_backend(backend, call, fallback=fallback)
     kw: Dict[str, Any] = dict(scale=scale, causal=causal, window=window,
                               cap=cap, block_k=block_k, exp_mode=exp_mode,
                               q_offset=q_offset, kv_len=kv_len, kv_pos=kv_pos)
+    if page_table is not None:
+        kw["page_table"] = page_table
     if axis_name is not None:
         kw["axis_name"] = axis_name
     return spec.fn(q, k, v, **kw)
@@ -197,7 +209,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 @register_backend(
     "naive",
-    supports=lambda call: not call.inside_shard_map,
+    supports=lambda call: not call.inside_shard_map
+    and not call.has_page_table,
     doc="Materialised-logits reference (PUMA dataflow): O(l²) memory; the "
         "correctness oracle every other backend is tested against.")
 def _naive(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
@@ -210,7 +223,8 @@ def _naive(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
 
 @register_backend(
     "naive_decode",
-    supports=lambda call: call.lq == 1 and not call.inside_shard_map,
+    supports=lambda call: call.lq == 1 and not call.inside_shard_map
+    and not call.has_page_table,
     doc="Single-token decode fast path: the logits row is O(L) already — the "
         "KV-block scan buys nothing and costs a collective-permute per block "
         "on a sharded cache (measured 12 GiB/token at 500k ctx; §Perf).")
@@ -220,7 +234,8 @@ def _naive_decode(q, k, v, **kw):
 
 @register_backend(
     "jnp",
-    supports=lambda call: not call.inside_shard_map,
+    supports=lambda call: not call.inside_shard_map
+    and not call.has_page_table,
     doc="Pure-jnp streaming scan (HASTILY §IV): online-softmax over KV "
         "blocks, O(l) memory, flash-style custom VJP, fully dynamic "
         "lengths/positions.  The default on CPU and for cached decode.")
@@ -236,7 +251,8 @@ def _pallas_supported(call: AttentionCall) -> bool:
     # The kernel wants static lengths (serving buckets them), no ring-buffer
     # position tables, and multi-row queries (decode rows go to naive_decode).
     return (call.static_lengths and not call.has_kv_pos
-            and not call.inside_shard_map and call.lq > 1)
+            and not call.inside_shard_map and not call.has_page_table
+            and call.lq > 1)
 
 
 @register_backend(
@@ -279,6 +295,27 @@ def _pallas(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
 
     attn.defvjp(attn_fwd, attn_bwd)
     return attn(q, k, v)
+
+
+@register_backend(
+    "paged",
+    supports=lambda call: call.has_page_table and call.lq == 1
+    and not call.inside_shard_map and not call.has_kv_pos,
+    doc="Paged-attention decode: reads KV pages in place from the pool "
+        "through the (B, P) page table — the Pallas kernel on TPU "
+        "(scalar-prefetch page-indexed DMA), the jnp page-block scan "
+        "elsewhere.  No gathered contiguous cache view is materialised.")
+def _paged(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
+           q_offset, kv_len, kv_pos, page_table):
+    assert kv_pos is None, "paged backend has no ring-buffer support"
+    assert kv_len is not None, "paged calls must pass per-lane kv_len"
+    # decode is causal by construction (the single query row sits at
+    # position kv_len-1, so the length mask is the causal mask); block_k is
+    # a streaming-scan tile size — page blocks are sized by page_size alone.
+    del causal, q_offset, block_k
+    from repro.kernels.paged_attention import paged_attention
+    return paged_attention(q, k, v, page_table, kv_len, scale=scale, cap=cap,
+                           window=window, exp_mode=exp_mode)
 
 
 @register_backend(

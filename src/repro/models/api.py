@@ -36,6 +36,9 @@ class Model:
     init_cache: Callable[..., Params]
     prefill: Optional[Callable] = None       # (params, batch, caches) → (logits, state)
     decode_step: Optional[Callable] = None   # (params, token, state, index) → (logits, state)
+    # (params, token (B,), pools, page_table (B, P), index (B,)) →
+    # (logits, pools): batched in-place paged decode (no gathered cache view)
+    decode_paged: Optional[Callable] = None
 
 
 # --------------------------------------------------------------------------
@@ -117,6 +120,7 @@ def build_model(cfg: ModelConfig) -> Model:
         decode_step=functools.partial(
             lambda cfg, params, token, state, index:
             LM.lm_decode_step(cfg, params, token, state, index), cfg),
+        decode_paged=functools.partial(LM.lm_decode_step_paged, cfg),
     )
 
 

@@ -119,10 +119,13 @@ def unembed_apply(cfg: ModelConfig, embed_p: Params, head_p: Optional[Params],
 # --------------------------------------------------------------------------
 
 def rope_apply(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
-    """Rotary embedding.  x: (B, H, L, D); pos: (L,) absolute positions."""
+    """Rotary embedding.  x: (B, H, L, D); pos: (L,) absolute positions, or
+    (B, L) when lanes sit at different positions (batched paged decode)."""
     d = x.shape[-1]
     freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
-    angles = pos.astype(jnp.float32)[:, None] * freqs[None, :]   # (L, D/2)
+    angles = pos.astype(jnp.float32)[..., :, None] * freqs   # (…, L, D/2)
+    if angles.ndim == 3:
+        angles = angles[:, None]                             # (B, 1, L, D/2)
     cos, sin = jnp.cos(angles), jnp.sin(angles)
     x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
     out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
@@ -160,14 +163,21 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                causal: bool = True,
                cache: Optional[Params] = None,
                cache_index: Optional[jax.Array] = None,
+               page_table: Optional[jax.Array] = None,
                xkv: Optional[jax.Array] = None,
                ) -> Tuple[jax.Array, Optional[Params]]:
     """One attention layer.
 
-    ``pos``: (L,) absolute positions of the query rows.
+    ``pos``: (L,) absolute positions of the query rows ((B, L) when lanes
+    decode at different positions — the paged path).
     ``cache``: {"k","v"} of shape (B, Hkv, Lmax, Dh) for decode; new K/V rows
     are written at ``cache_index`` and attention runs against the whole cache
     with ``kv_len = cache_index + L``.
+    ``page_table``: (B, P) physical-page table — ``cache`` leaves are then
+    *page pools* (num_pages, Hkv, page_size, Dh) shared by all lanes,
+    ``cache_index`` is the (B,) per-lane next row.  Decode writes the one new
+    KV row straight into its physical page and attends in place through the
+    table (no gathered contiguous cache view).
     ``xkv``: cross-attention source (encoder output); disables cache/rope-k.
     """
     b, l, _ = x.shape
@@ -191,6 +201,51 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
     elif cfg.pos_embedding == "rope":
         q = rope_apply(q, pos, theta)
         k = rope_apply(k, jnp.arange(k.shape[2], dtype=jnp.int32), theta)
+
+    scale_default = cfg.attn_scale if cfg.attn_scale else cfg.d_head ** -0.5
+    if cache is not None and page_table is not None:
+        # Paged decode: cache leaves are page pools.  Write the single new
+        # KV row in place at (physical page, in-page offset), then attend
+        # through the page table — no gathered (B, …, P·ps, …) view exists.
+        assert l == 1 and xkv is None, "paged attention is decode-only"
+        idx = jnp.asarray(cache_index, jnp.int32)        # (B,) next row
+        ps = cache["k"].shape[2]
+        page_ids = jnp.take_along_axis(
+            page_table, (idx // ps)[:, None], axis=1)[:, 0]       # (B,)
+        off = idx % ps
+        kv_len = idx + 1
+        if "ks" in cache:                    # INT8 pool: values + row scales
+            kq_new, ks_new = quantize_kv_rows(k)
+            vq_new, vs_new = quantize_kv_rows(v)
+            new_cache = {
+                "k": cache["k"].at[page_ids, :, off].set(kq_new[:, :, 0]),
+                "v": cache["v"].at[page_ids, :, off].set(vq_new[:, :, 0]),
+                "ks": cache["ks"].at[page_ids, :, off].set(ks_new[:, :, 0]),
+                "vs": cache["vs"].at[page_ids, :, off].set(vs_new[:, :, 0]),
+            }
+            from repro.kernels.paged_attention import paged_attention
+            out = paged_attention(
+                q, new_cache["k"], new_cache["v"], page_table, kv_len,
+                scale=scale_default, cap=cfg.attn_softcap, window=window,
+                exp_mode=cfg.exp_mode, k_scale=new_cache["ks"],
+                v_scale=new_cache["vs"])
+        else:
+            new_cache = {
+                "k": cache["k"].at[page_ids, :, off].set(
+                    k[:, :, 0].astype(cache["k"].dtype)),
+                "v": cache["v"].at[page_ids, :, off].set(
+                    v[:, :, 0].astype(cache["v"].dtype)),
+            }
+            out = attention(q, new_cache["k"], new_cache["v"],
+                            backend=backend_for_config(cfg.attn_backend,
+                                                       cfg.attn_impl),
+                            scale=scale_default, causal=causal, window=window,
+                            cap=cfg.attn_softcap, block_k=cfg.block_k,
+                            exp_mode=cfg.exp_mode, kv_len=kv_len,
+                            page_table=page_table, fallback=True)
+        out = out.transpose(0, 2, 1, 3).reshape(b, l,
+                                                cfg.num_heads * cfg.d_head)
+        return dense_apply(p["wo"], out), new_cache
 
     new_cache = None
     q_offset = 0

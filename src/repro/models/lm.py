@@ -72,7 +72,8 @@ def _layer_init(key, cfg: ModelConfig, kind: str) -> Params:
 
 def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
                  pos: jax.Array, cache: Optional[Params],
-                 cache_index: Optional[jax.Array], causal: bool
+                 cache_index: Optional[jax.Array], causal: bool,
+                 page_table: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     aux = jnp.zeros((), jnp.float32)
     if kind == "mamba":
@@ -82,7 +83,8 @@ def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
         return x + h, new_cache, aux
     a, new_cache = L.attn_apply(cfg, p["attn"], L.norm_apply(cfg, p["ln1"], x),
                                 kind=kind, pos=pos, causal=causal,
-                                cache=cache, cache_index=cache_index)
+                                cache=cache, cache_index=cache_index,
+                                page_table=page_table)
     if cfg.post_block_norm:
         a = L.norm_apply(cfg, p["ln1_post"], a)
     x = x + a
@@ -153,7 +155,8 @@ def trunk_cache_init(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 
 def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 pos: jax.Array, caches: Optional[Params] = None,
-                cache_index: Optional[jax.Array] = None, causal: bool = True
+                cache_index: Optional[jax.Array] = None, causal: bool = True,
+                page_table: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     kinds, nper, tail = period_layout(cfg)
     shared = params.get("shared_attn")
@@ -175,7 +178,8 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
             x, lc, a = _layer_apply(
                 cfg, kind, pp[str(i)], x, pos=pos,
                 cache=None if pc is None else pc[str(i)],
-                cache_index=cache_index, causal=causal)
+                cache_index=cache_index, causal=causal,
+                page_table=page_table)
             if pc is not None:
                 new_c[str(i)] = lc
             aux = aux + a
@@ -208,7 +212,8 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
             x, lc, a = _layer_apply(
                 cfg, kinds[i % len(kinds)], params["tail"][i], x, pos=pos,
                 cache=None if caches is None else caches["tail"][i],
-                cache_index=cache_index, causal=causal)
+                cache_index=cache_index, causal=causal,
+                page_table=page_table)
             aux_total = aux_total + a
             new_caches["tail"].append(lc)
     return x, (new_caches if caches is not None else None), aux_total
@@ -233,23 +238,28 @@ def lm_apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
              prefix_embed: Optional[jax.Array] = None,
              caches: Optional[Params] = None,
              cache_index: Optional[jax.Array] = None,
-             causal: bool = True
+             causal: bool = True,
+             page_table: Optional[jax.Array] = None
              ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """tokens (B, L) [+ optional (B, Lp, D) prefix] → logits (B, L', V).
 
     ``prefix_embed`` (vlm patches / audio frames) is prepended to the token
     embeddings; returned logits cover the full L' = Lp + L sequence.
+    ``cache_index`` may be a (B,) vector (paged decode: lanes at different
+    positions) — positions then broadcast to (B, L).
     """
     offset = jnp.asarray(0 if cache_index is None else cache_index, jnp.int32)
     lp = 0 if prefix_embed is None else prefix_embed.shape[1]
-    pos_tok = offset + lp + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    # offset () → positions (L,); offset (B,) → per-lane positions (B, L)
+    pos_tok = (offset[..., None] + lp
+               + jnp.arange(tokens.shape[1], dtype=jnp.int32))
     x = L.embed_apply(cfg, params["embed"], tokens, pos_tok)
     if prefix_embed is not None:
         x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
-    pos = offset + jnp.arange(x.shape[1], dtype=jnp.int32)
+    pos = offset[..., None] + jnp.arange(x.shape[1], dtype=jnp.int32)
     x, new_caches, aux = trunk_apply(cfg, params["trunk"], x, pos=pos,
                                      caches=caches, cache_index=cache_index,
-                                     causal=causal)
+                                     causal=causal, page_table=page_table)
     x = L.norm_apply(cfg, params["final_norm"], x)
     logits = L.unembed_apply(cfg, params["embed"], params.get("lm_head"), x)
     # Keep the vocab dim sharded through the loss (logits are the largest
@@ -313,4 +323,19 @@ def lm_decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
     """One token (B,) at absolute position ``index`` → (logits (B, V), caches)."""
     logits, caches, _ = lm_apply(cfg, params, token[:, None], caches=caches,
                                  cache_index=index)
+    return logits[:, -1], caches
+
+
+def lm_decode_step_paged(cfg: ModelConfig, params: Params, token: jax.Array,
+                         caches: Params, page_table: jax.Array,
+                         index: jax.Array) -> Tuple[jax.Array, Params]:
+    """Batched paged decode: one token (B,) per lane against shared page
+    pools.  ``caches`` leaves are pools (num_pages, Hkv, page_size, Dh),
+    ``page_table`` (B, P) maps each lane's table slots to physical pages and
+    ``index`` (B,) is the per-lane next cache row.  Each layer writes its
+    new KV row in place and attends through the table — no gathered
+    contiguous cache view is ever built (the whole point; see
+    kernels/paged_attention)."""
+    logits, caches, _ = lm_apply(cfg, params, token[:, None], caches=caches,
+                                 cache_index=index, page_table=page_table)
     return logits[:, -1], caches

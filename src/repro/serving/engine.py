@@ -10,10 +10,11 @@ worst-case memory per slot and decodes against ``max_len`` rows always.
 
 ``PagedServingEngine`` — block/paged KV (``serving/paged.py``): caches live
 in a page pool with free-list allocation and per-slot page tables; decode
-gathers each slot's pages into a contiguous view sized by the *longest
-active* sequence, not ``max_len``.  The serving-side realisation of
-HASTILY's linear-memory pipelining; restricted to cache layouts where every
-leaf grows with sequence length.
+reads pages *in place* through the table (``kernels/paged_attention``) and
+writes each lane's one new KV row straight into its physical page — no
+per-step gathered cache copy.  The serving-side realisation of HASTILY's
+linear-memory pipelining; restricted to cache layouts where every leaf
+grows with sequence length.
 
 Both engines decode one token for all active slots per ``step()`` — compute
 never waits for the slowest request, finished slots are recycled
@@ -76,9 +77,22 @@ class _EngineBase:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    @staticmethod
+    def greedy_token(logits: jax.Array) -> int:
+        """Deterministic greedy pick: the *lowest* index among joint maxima.
+
+        ``argmax`` tie behaviour is backend-defined; serving promises
+        reproducible token streams across engines and platforms, so exact
+        logit ties break to the lowest token id explicitly.
+        """
+        lg = jnp.asarray(logits)
+        v = lg.shape[-1]
+        hit = lg == jnp.max(lg)
+        return int(jnp.min(jnp.where(hit, jnp.arange(v), v)))
+
     def _sample(self, logits: jax.Array, temperature: float) -> int:
         if temperature <= 0.0:
-            return int(jnp.argmax(logits))
+            return self.greedy_token(logits)
         self.key, sub = jax.random.split(self.key)
         return int(jax.random.categorical(sub, logits / temperature))
 
@@ -199,11 +213,18 @@ class PagedServingEngine(_EngineBase):
     (ceil((prompt + max_new) / page_size)), so the lazy per-token page
     allocation during decode can never fail; physical pages are taken from
     the free list only as the sequence grows and all return on completion.
-    Decode runs over a gathered contiguous view of ``P · page_size`` rows,
-    where P is the page count of the *longest active* sequence rounded up to
-    a power of two (bounds jit retraces); attention masks the padding via
-    ``kv_len``.  Inactive batch lanes are pointed at the pool's scratch page
-    so their (garbage) writes never touch a live page.
+
+    Decode is *in place*: ``(pool, page_table, positions)`` go straight into
+    the model's batched paged decode step, which writes each lane's single
+    new KV row at its (physical page, in-page offset) and attends through
+    the page table (``kernels/paged_attention`` — online-softmax combine
+    across page blocks).  No gathered contiguous ``(B, …, P·page_size, …)``
+    cache view is ever materialised; the per-step cache traffic is one read
+    of the live rows plus a one-row write, instead of PR 1's
+    O(B·H·Lmax·D) gather + page write-back copy.  The table is padded to a
+    power-of-two width (bounds jit retraces) with the pool's scratch page;
+    idle lanes point at scratch so their garbage writes never touch a live
+    page, and padding slots are masked by ``kv_len`` inside the kernel.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
@@ -211,33 +232,22 @@ class PagedServingEngine(_EngineBase):
                  max_len: Optional[int] = None, seed: int = 0):
         max_len = max_len or num_pages * page_size
         super().__init__(cfg, params, slots=slots, max_len=max_len, seed=seed)
+        if self.model.decode_paged is None:
+            raise ValueError(
+                f"paged KV cache: {cfg.name} ({cfg.family}) has no batched "
+                f"paged decode step — serve it with the slot-contiguous "
+                f"engine")
         self.kv = PagedKVCache(self.model, num_pages, page_size)
         self.page_tables: List[List[int]] = [[] for _ in range(slots)]
         self._reserved: List[int] = [0] * slots
 
         m = self.model
-        kv = self.kv
-        axes = kv.axes
 
         def decode_paged(params, pool, tbl, toks, idxs):
-            caches = kv.gather(pool, tbl)
+            return m.decode_paged(params, toks, pool, tbl, idxs)
 
-            def one(tok, cache, idx):
-                cache1 = jax.tree.map(jnp.expand_dims, cache, axes)
-                lg, c = m.decode_step(params, tok[None], cache1, idx)
-                c = jax.tree.map(jnp.squeeze, c, axes)
-                return lg[0], c
-
-            logits, view = jax.vmap(one, in_axes=(0, axes, 0),
-                                    out_axes=(0, axes))(toks, caches, idxs)
-            page_no = idxs // kv.page_size
-            page_ids = jnp.take_along_axis(tbl, page_no[:, None], 1)[:, 0]
-            pool = kv.scatter_active_page(pool, view, page_ids,
-                                          page_no * kv.page_size)
-            return logits, pool
-
-        # donated pool: the page write-back updates in place instead of
-        # copying the whole pool every step.
+        # donated pool: each layer's one-row write updates in place instead
+        # of copying the whole pool every step.
         self._decode = jax.jit(decode_paged, donate_argnums=(1,))
 
     def _admit(self) -> None:

@@ -5,9 +5,9 @@ so one long-context slot dictates the memory bill of every short request —
 the serving-side analogue of the O(l²) logit matrix HASTILY streams away.
 Here the resident KV store is a *pool* of fixed-size pages; each sequence
 owns just the pages its current length needs (a page table per slot) and
-decode gathers/attends over ``max(active lengths)`` rows instead of
-``max_len``.  Linear-in-live-tokens memory is the paper's O(l) pipelining
-restated for the cache.
+decode attends over each lane's live rows *in place* through the table
+(``kernels/paged_attention``).  Linear-in-live-tokens memory is the paper's
+O(l) pipelining restated for the cache.
 
 Mechanics
 ---------
@@ -15,15 +15,18 @@ Mechanics
   leaf keeps its family layout, with the batch dim reinterpreted as the page
   id and the length dim as the in-page offset.  Page ``num_pages`` is a
   scratch page — writes from inactive batch lanes land there.
-- A free list hands out physical pages; admission *reserves* the worst-case
-  page count (ceil((prompt+max_new)/page_size)) so lazy per-token allocation
-  can never deadlock mid-decode, while physical pages are only taken as the
-  sequence actually grows.
-- ``gather`` materialises a per-step contiguous view (B, …, P·page_size, …)
-  from each slot's page table (padded with the scratch page; padding rows are
-  masked by ``kv_len`` inside attention).  ``scatter_active_page`` writes the
-  one page whose rows changed back to the pool — decode touches exactly one
-  row, so the page write-back is the whole diff.
+- A free list (a min-heap: pages are handed out lowest-id-first, so reuse is
+  deterministic and allocations cluster at the bottom of the pool) hands out
+  physical pages; admission *reserves* the worst-case page count
+  (ceil((prompt+max_new)/page_size)) so lazy per-token allocation can never
+  deadlock mid-decode, while physical pages are only taken as the sequence
+  actually grows.
+- Decode never touches this module: the engine hands ``(pool, page_table,
+  positions)`` straight to the model's paged decode step, which reads pages
+  in place (``kernels/paged_attention``) and writes the one new KV row at
+  its (physical page, offset).  ``gather`` — the materialised contiguous
+  view (B, …, P·page_size, …) — survives only as the oracle for
+  cross-checking the in-place path against the naive backends.
 
 Only cache layouts whose every leaf grows with ``max_len`` are supported
 (standard bf16/f32 and INT8-quantised KV caches).  SSM states are O(1) per
@@ -32,6 +35,7 @@ O(window); both are rejected at construction with a clear error.
 """
 from __future__ import annotations
 
+import heapq
 from typing import Any, List
 
 import jax
@@ -87,7 +91,7 @@ class PagedKVCache:
             return ax + 2
         self.laxes = jax.tree_util.tree_map_with_path(
             length_axis, small, big, self.axes)
-        self.free: List[int] = list(range(num_pages))
+        self.free: List[int] = list(range(num_pages))   # min-heap by page id
         self.reserved = 0
 
         def write(pool, caches1, ids):
@@ -121,11 +125,15 @@ class PagedKVCache:
         self.reserved += n
 
     def alloc(self) -> int:
-        # Reservations guarantee this pop never fails mid-decode.
-        return self.free.pop()
+        # Reservations guarantee this pop never fails mid-decode.  Lowest
+        # id first (not LIFO): page ids stay dense at the bottom of the
+        # pool for locality, and allocation order is deterministic under
+        # any release order — tests can predict physical layout.
+        return heapq.heappop(self.free)
 
     def release(self, pages: List[int], reserved: int) -> None:
-        self.free.extend(pages)
+        for p in pages:
+            heapq.heappush(self.free, p)
         self.reserved -= reserved
 
     # ------------------------------------------------------------- pool ops
@@ -135,32 +143,16 @@ class PagedKVCache:
                                 jnp.asarray(pages, jnp.int32))
 
     def gather(self, pool: Pytree, tbl: jax.Array) -> Pytree:
-        """Page tables (B, P) → contiguous view caches (B, …, P·ps, …)."""
+        """Page tables (B, P) → contiguous view caches (B, …, P·ps, …).
+
+        This is the O(B·H·L·D) copy the in-place decode path deleted; it
+        remains only as the oracle for cross-checking ``paged_attention``
+        against the contiguous backends (tests, benchmarks).  Nothing on
+        the decode hot path calls it.
+        """
         def g(leaf, ax, lax):
             out = jnp.take(leaf, tbl, axis=ax)      # B,P inserted at ax
             out = jnp.moveaxis(out, ax + 1, lax)    # P next to in-page offset
             s = out.shape
             return out.reshape(s[:lax] + (s[lax] * s[lax + 1],) + s[lax + 2:])
         return jax.tree.map(g, pool, self.axes, self.laxes)
-
-    def scatter_active_page(self, pool: Pytree, view: Pytree,
-                            page_ids: jax.Array, page_start: jax.Array
-                            ) -> Pytree:
-        """Write each lane's currently-written page from ``view`` back.
-
-        ``page_ids`` (B,) physical target page per lane (scratch for idle
-        lanes); ``page_start`` (B,) the page's first row in view coords.
-        Decode mutates a single row, so one page per lane is the whole diff.
-        """
-        ps = self.page_size
-        rows = page_start[:, None] + jnp.arange(ps, dtype=jnp.int32)  # (B,ps)
-
-        def sc(pl, g, ax, lax):
-            # rows (B, ps) → index of g.ndim with B at ax, ps at lax (ax<lax,
-            # so a plain reshape preserves the B-major/ps-minor order).
-            shape = [1] * g.ndim
-            shape[ax], shape[lax] = rows.shape[0], ps
-            page = jnp.take_along_axis(g, rows.reshape(shape), axis=lax)
-            return pl.at[(slice(None),) * ax + (page_ids,)].set(page)
-
-        return jax.tree.map(sc, pool, view, self.axes, self.laxes)

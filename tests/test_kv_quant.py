@@ -36,9 +36,14 @@ def test_quantized_attention_close_to_float(rng):
 
 @pytest.mark.parametrize("name", [
     pytest.param("deepseek-7b", marks=pytest.mark.xfail(
-        reason="known near-tie: int8 KV error (~1%) flips 1/10 argmaxes on "
-               "this seed; exact greedy match is not guaranteed under "
-               "quantisation", strict=False)),
+        reason="genuine near-tie flip, not an argmax tie-break artefact "
+               "(greedy ties break lowest-index since the serving "
+               "tie-break landed): on this seed exactly one of 10 argmaxes "
+               "(lane 0, step 4) has an f32 top-2 margin of 8.8e-3 while "
+               "the int8 KV quantisation perturbs those logits by ~1.6e-2 "
+               "— the flip (token 468 → 490) is below the quantisation "
+               "noise floor, so exact greedy match is unattainable here",
+        strict=False)),
     "gemma2-9b",
 ])
 def test_greedy_decode_agrees(name, rng):

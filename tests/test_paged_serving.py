@@ -1,5 +1,6 @@
 """Paged-KV serving engine: equivalence with the contiguous engine, page
-lifecycle (free list, reuse after release), unsupported-layout rejection."""
+lifecycle (free list, reuse after release), unsupported-layout rejection,
+and the in-place decode guarantee (no gathered cache view in the graph)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -137,6 +138,65 @@ def test_lazy_page_growth():
     assert len(eng.page_tables[0]) == 2          # crossed row 8
     eng.run()
     assert eng.pages_in_use == 0
+
+
+# ------------------------------------------------------- in-place decode --
+
+def _jaxpr_shapes(jaxpr):
+    """Every intermediate array shape in a jaxpr, nested subjaxprs included
+    (pjit bodies, scan bodies, vmap — wherever the gather could hide)."""
+    def sub(val):
+        vals = val if isinstance(val, (list, tuple)) else [val]
+        for v in vals:
+            if isinstance(v, jax.core.ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, jax.core.Jaxpr):
+                yield v
+
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                yield tuple(aval.shape)
+        for val in eqn.params.values():
+            for j in sub(val):
+                yield from _jaxpr_shapes(j)
+
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+def test_decode_graph_has_no_gathered_view(kv_quant):
+    """The paged decode step must never materialise the contiguous
+    (B, …, width·page_size, …) cache view: every intermediate in the traced
+    step graph is checked for the gathered-length dimension.  page_size=12
+    with a 16-slot table makes that length 192 — longer than one attend
+    block and a value no model/config dimension of the smoke config shares,
+    so a hit can only be the gathered copy."""
+    cfg, params = build(kv_quant=kv_quant)
+    ps, width = 12, 16
+    eng = PagedServingEngine(cfg, params, slots=2, page_size=ps,
+                             num_pages=32)
+    # a 150-row prompt owns 13 pages; the engine pads tables to width 16
+    eng.submit(Request(uid=0,
+                       prompt=(np.arange(150, dtype=np.int32)
+                               % cfg.vocab_size),
+                       max_new=4))
+    eng.step()
+    npages = len(eng.page_tables[0])
+    assert npages == 13 and (1 << (npages - 1).bit_length()) == width
+    tbl = np.full((2, width), eng.kv.scratch, np.int32)
+    tbl[0, :npages] = eng.page_tables[0]
+    gathered_len = width * ps                              # 192
+
+    jaxpr = jax.make_jaxpr(eng._decode)(
+        params, eng.kv.pool, jnp.asarray(tbl),
+        jnp.zeros((2,), jnp.int32), jnp.asarray([150, 0], jnp.int32))
+    bad = [s for s in _jaxpr_shapes(jaxpr.jaxpr) if gathered_len in s]
+    assert not bad, f"gathered cache view in decode graph: {bad}"
+
+    # sanity: the detector does catch the legacy gather copy
+    legacy = jax.make_jaxpr(
+        lambda pool: eng.kv.gather(pool, jnp.asarray(tbl)))(eng.kv.pool)
+    assert any(gathered_len in s for s in _jaxpr_shapes(legacy.jaxpr))
 
 
 # ------------------------------------------------------------- rejection --

@@ -77,6 +77,15 @@ def test_temperature_sampling_varies(rng):
     assert a.tokens != b.tokens       # overwhelmingly likely
 
 
+def test_greedy_tie_break_lowest_index():
+    """Greedy serving breaks exact logit ties to the lowest token id —
+    explicitly, not via backend-defined argmax behaviour."""
+    from repro.serving.engine import _EngineBase
+    assert _EngineBase.greedy_token(jnp.zeros((9,))) == 0
+    assert _EngineBase.greedy_token(jnp.asarray([0.0, 3.0, 3.0, 1.0])) == 1
+    assert _EngineBase.greedy_token(jnp.asarray([-1.0, -5.0, -1.0])) == 0
+
+
 def test_eos_stops_early(rng):
     cfg, params, eng = mk_engine(slots=1)
     prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
