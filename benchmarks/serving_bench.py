@@ -1,15 +1,17 @@
-"""Serving benchmarks: slot vs paged engines + the in-place decode A/B.
+"""Serving benchmarks: engines, the in-place decode A/B, and prefill TTFT.
 
-Three families, all emitted as CSV rows (``benchmarks.run``) *and* as a
+Four families, all emitted as CSV rows (``benchmarks.run``) *and* as a
 machine-readable ``BENCH_serving.json`` so the perf trajectory is tracked
 across PRs:
 
-1. **Engine throughput** — slot-contiguous vs paged KV at the SAME
-   resident-KV budget under mixed traffic (a couple of long prompts among
-   many short ones).  The slot engine sizes every lane for the longest
-   request; the paged engine spends rows page-by-page, so the same budget
-   sustains more concurrent lanes.  Per-step decode latency (p50/p95) and
-   peak resident cache rows are recorded per engine.
+1. **Engine throughput** — slot-contiguous vs the request-level
+   ``EngineCore`` (paged KV + chunked prefill) at the SAME resident-KV
+   budget under mixed traffic (a couple of long prompts among many short
+   ones).  The slot engine sizes every lane for the longest request; the
+   paged engine spends rows page-by-page, so the same budget sustains more
+   concurrent lanes.  Per-step decode latency (p50/p95), peak resident
+   cache rows and mixed chunked-prefill+decode step counts are recorded;
+   each arm carries its ``prefill_mode`` ("contiguous" / "chunked").
 
 2. **Step breakdown** — the PR-1 gather path vs the in-place paged path at
    equal row budget, one attention layer, same pool/table/occupancy:
@@ -20,8 +22,15 @@ across PRs:
    - in-place: write each lane's one new KV row at its (page, offset) and
      attend through the table (``kernels/paged_attention``) — no copy.
 
-   Component timings (gather / attend / write-back) show where the legacy
-   milliseconds went and that the live step is attend-dominated.
+3. **Prefill TTFT** — time-to-first-token on long prompts, chunked paged
+   prefill (``EngineCore``: fixed-shape chunks streamed straight into
+   pages) vs the PR-2 *scatter* path (b=1 contiguous prefill jitted per
+   prompt length, then scattered into pages — reconstructed here inline as
+   the baseline), at equal page budget.  Measured over a stream of
+   *distinct* prompt lengths — the serving-realistic case, where the
+   scatter path pays a fresh XLA compile per length while chunking's
+   static shapes stay warm — and once more at a repeated (warm) length.
+   Each arm is tagged ``prefill_mode: chunked|scatter``.
 
 CPU numbers are relative A/B signals, not TPU claims (docs/benchmarks.md).
 """
@@ -98,34 +107,51 @@ def _mixed_requests(vocab: int, tiny: bool, seed: int = 7):
             for i, lp in enumerate(prompts)]
 
 
-def _instrumented_drain(engine, requests, rows_in_use) -> Dict[str, Any]:
-    """Drain traffic, timing every decode step and tracking cache pressure."""
+def _instrumented_drain(engine, requests, rows_in_use,
+                        core: bool = False) -> Dict[str, Any]:
+    """Drain traffic, timing every step and tracking cache pressure.  With
+    ``core=True`` the engine is an EngineCore and per-step StepOutput
+    accounting (mixed chunked-prefill+decode batches) is recorded too."""
     for r in requests:
         engine.submit(r)
     lat: List[float] = []
     peak_rows = 0
-    steps = 0
+    steps = mixed_steps = prefill_toks = decode_toks = 0
+
+    def busy():
+        if core:
+            return engine.scheduler.has_work()
+        return engine.queue or any(a is not None for a in engine.active)
+
     t0 = time.perf_counter()
-    while engine.queue or any(a is not None for a in engine.active):
+    while busy():
         s0 = time.perf_counter()
-        engine.step()
+        out = engine.step()
         lat.append((time.perf_counter() - s0) * 1e3)
         peak_rows = max(peak_rows, rows_in_use(engine))
         steps += 1
+        if core:
+            mixed_steps += int(out.mixed)
+            prefill_toks += out.prefill_tokens
+            decode_toks += out.decode_tokens
         if steps > 10_000:
             raise RuntimeError("serving did not drain")
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in engine.finished)
     engine.finished.clear()             # engine is reused across passes
-    return {"tok_s": toks / dt, "tokens": toks, "steps": steps,
-            "step_ms_p50": _pct(lat, 50), "step_ms_p95": _pct(lat, 95),
-            "peak_cache_rows": int(peak_rows)}
+    res = {"tok_s": toks / dt, "tokens": toks, "steps": steps,
+           "step_ms_p50": _pct(lat, 50), "step_ms_p95": _pct(lat, 95),
+           "peak_cache_rows": int(peak_rows)}
+    if core:
+        res.update(mixed_steps=mixed_steps, prefill_tokens=prefill_toks,
+                   decode_tokens=decode_toks)
+    return res
 
 
 def _engine_results(tiny: bool) -> Dict[str, Any]:
     from repro.configs import get_config
     from repro.models import build_model
-    from repro.serving import PagedServingEngine, ServingEngine
+    from repro.serving import EngineCore, ServingEngine
 
     page = 8 if tiny else 16
     max_len = 128 if tiny else 1024          # serving SLA: longest request
@@ -138,21 +164,23 @@ def _engine_results(tiny: bool) -> Dict[str, Any]:
     num_pages = budget_rows // page
 
     # Engines are REUSED across passes: early passes warm the jit caches
-    # (per-width decode buckets, per-length prefill buckets), the last pass
-    # is the steady state a long-running server actually sees.
+    # (per-width step buckets — and, for the slot engine, per-length prefill
+    # buckets), the last pass is the steady state a long-running server
+    # actually sees.
     slot_eng = ServingEngine(cfg, params, slots=slot_lanes, max_len=max_len)
-    paged_eng = PagedServingEngine(cfg, params, slots=paged_lanes,
-                                   page_size=page, num_pages=num_pages,
-                                   max_len=max_len)
+    core_eng = EngineCore(cfg, params, lanes=paged_lanes, page_size=page,
+                          num_pages=num_pages, max_len=max_len,
+                          chunk_size=2 * page)
     for _ in range(2 if tiny else 3):
         slot = _instrumented_drain(
             slot_eng, _mixed_requests(cfg.vocab_size, tiny),
             lambda e: e.slots * e.max_len)
         paged = _instrumented_drain(
-            paged_eng, _mixed_requests(cfg.vocab_size, tiny),
-            lambda e: e.pages_in_use * e.kv.page_size)
+            core_eng, _mixed_requests(cfg.vocab_size, tiny),
+            lambda e: e.pages_in_use * e.kv.page_size, core=True)
 
     slot["lanes"], paged["lanes"] = slot_lanes, paged_lanes
+    slot["prefill_mode"], paged["prefill_mode"] = "contiguous", "chunked"
     return {"budget_rows": budget_rows, "page_size": page,
             "num_pages": num_pages, "max_len": max_len,
             "slot": slot, "paged": paged,
@@ -258,13 +286,129 @@ def _breakdown_results(tiny: bool) -> Dict[str, Any]:
     return out
 
 
+# ------------------------------------------------------------ prefill TTFT --
+
+def _scatter_prefill_arm(cfg, params, lens, num_pages, page) -> List[float]:
+    """The PR-2 prefill dataflow, reconstructed as the baseline: b=1
+    contiguous prefill (jitted per prompt length) then a scatter of the
+    contiguous cache into pages — the ``write_prefill`` copy the chunked
+    path deleted.  → TTFT ms per prompt."""
+    from repro.models import build_model
+    from repro.serving.core import greedy_token
+    from repro.serving.paged import PagedKVCache
+
+    model = build_model(cfg)
+    kv = PagedKVCache(model, num_pages, page)
+
+    def write(pool, caches1, ids):
+        n = ids.shape[0]
+
+        def wr(pl, one, ax, lax):
+            s = one.shape
+            one = one.reshape(s[:lax] + (n, page) + s[lax + 1:])
+            one = jnp.squeeze(one, ax)
+            one = jnp.moveaxis(one, lax - 1, ax)
+            return pl.at[(slice(None),) * ax + (ids,)].set(
+                one.astype(pl.dtype))
+
+        return jax.tree.map(wr, pool, caches1, kv.axes, kv.laxes)
+
+    scatter = jax.jit(write, donate_argnums=(0,))
+    prefill = jax.jit(
+        lambda p, t, c: model.prefill(p, {"tokens": t}, c))
+
+    rng = np.random.default_rng(0)
+    ttft = []
+    for lp in lens:
+        prompt = rng.integers(0, cfg.vocab_size, lp).astype(np.int32)
+        n0 = kv.pages_needed(lp)
+        pages = jnp.arange(n0, dtype=jnp.int32)
+        t0 = time.perf_counter()
+        fresh = model.init_cache(1, n0 * page)
+        logits, c1 = prefill(params, jnp.asarray(prompt)[None], fresh)
+        kv.pool = scatter(kv.pool, c1, pages)
+        tok = greedy_token(logits[0])
+        jax.block_until_ready(kv.pool)
+        del tok
+        ttft.append((time.perf_counter() - t0) * 1e3)
+    return ttft
+
+
+def _chunked_prefill_arm(cfg, params, lens, num_pages, page,
+                         chunk) -> List[float]:
+    """Chunked paged prefill through EngineCore at the same page budget:
+    submit → step until the first token lands.  → TTFT ms per prompt."""
+    from repro.serving import EngineCore, Request
+
+    eng = EngineCore(cfg, params, lanes=1, page_size=page,
+                     num_pages=num_pages, chunk_size=chunk,
+                     max_len=num_pages * page)
+    rng = np.random.default_rng(0)
+    ttft = []
+    for i, lp in enumerate(lens):
+        prompt = rng.integers(0, cfg.vocab_size, lp).astype(np.int32)
+        t0 = time.perf_counter()
+        eng.submit(Request(uid=i, prompt=prompt, max_new=1))
+        while eng.scheduler.has_work():
+            out = eng.step()
+            if out.tokens:
+                break
+        ttft.append((time.perf_counter() - t0) * 1e3)
+        eng.run()                         # drain the tail, free the pages
+        eng.finished.clear()
+    return ttft
+
+
+def _prefill_results(tiny: bool) -> Dict[str, Any]:
+    """TTFT on long prompts: chunked vs scatter at equal page budget.
+
+    ``distinct``: a stream of all-different prompt lengths — the scatter
+    path re-jits its b=1 prefill for every length, the chunked path reuses
+    its two static step shapes.  ``warm``: the same length twice, keeping
+    only the second (steady-state compute, compile excluded).
+    """
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    page = 8 if tiny else 16
+    chunk = 4 * page          # prefill-only lanes: bigger chunks, no padding
+    if tiny:
+        lens = [40, 44, 52, 60]
+    else:
+        lens = [384, 400, 432, 464, 496]
+    cfg = get_config("deepseek-7b-smoke")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    num_pages = -(-max(lens) // page) + 2     # equal budget for both arms
+
+    arms = {}
+    for mode, fn in (("scatter", lambda ls: _scatter_prefill_arm(
+                          cfg, params, ls, num_pages, page)),
+                     ("chunked", lambda ls: _chunked_prefill_arm(
+                          cfg, params, ls, num_pages, page, chunk))):
+        distinct = fn(lens)
+        warm = min(fn([lens[0]] * 4)[1:])     # best-of-3 after compile
+        arms[mode] = {"prefill_mode": mode,
+                      "ttft_ms_distinct": distinct,
+                      "ttft_ms_distinct_median": _pct(distinct, 50),
+                      "ttft_ms_warm": warm}
+    return {"page_size": page, "chunk_size": chunk, "num_pages": num_pages,
+            "prompt_lens": lens,
+            "scatter": arms["scatter"], "chunked": arms["chunked"],
+            "ttft_speedup_distinct":
+                arms["scatter"]["ttft_ms_distinct_median"]
+                / arms["chunked"]["ttft_ms_distinct_median"],
+            "ttft_speedup_warm": arms["scatter"]["ttft_ms_warm"]
+                / arms["chunked"]["ttft_ms_warm"]}
+
+
 # ----------------------------------------------------------------- driver --
 
 def run_serving(tiny: bool = False) -> Dict[str, Any]:
     return {"meta": {"platform": jax.default_backend(), "tiny": tiny,
                      "config": "deepseek-7b-smoke"},
             "engines": _engine_results(tiny),
-            "step_breakdown": _breakdown_results(tiny)}
+            "step_breakdown": _breakdown_results(tiny),
+            "prefill_ttft": _prefill_results(tiny)}
 
 
 def write_json(results: Dict[str, Any], path: str = _JSON_DEFAULT) -> None:
@@ -275,19 +419,24 @@ def write_json(results: Dict[str, Any], path: str = _JSON_DEFAULT) -> None:
 
 def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
     e, bd = results["engines"], results["step_breakdown"]
+    pf = results["prefill_ttft"]
     yield ("serving/slot_contiguous_tok_s", e["slot"]["tok_s"],
            f"{e['slot']['tokens']} toks; {e['slot']['lanes']} lanes x "
            f"{e['max_len']} rows = budget")
     yield ("serving/paged_tok_s", e["paged"]["tok_s"],
            f"same budget as {e['num_pages']} x {e['page_size']}-row pages; "
-           f"{e['paged']['lanes']} lanes")
+           f"{e['paged']['lanes']} lanes, chunked prefill")
     yield ("serving/paged_speedup", e["speedup"],
            "equal-memory mixed-length traffic; >1 means paging pays")
     yield ("serving/paged_step_ms_p50", e["paged"]["step_ms_p50"],
-           "decode step latency, in-place paged path")
+           "EngineCore step latency (chunked prefill + decode batches)")
     yield ("serving/paged_peak_cache_rows", float(e["paged"]["peak_cache_rows"]),
            f"resident rows at peak (slot engine: "
            f"{e['slot']['peak_cache_rows']} always)")
+    yield ("serving/mixed_prefill_decode_steps",
+           float(e["paged"]["mixed_steps"]),
+           f"steps batching prefill chunks with decodes "
+           f"({e['paged']['prefill_tokens']} chunk toks streamed)")
     yield ("serving/step_legacy_gather_ms", bd["legacy_gather_ms"],
            "the per-step copy the in-place kernel deleted")
     yield ("serving/step_attend_in_place_ms", bd["attend_in_place_ms"],
@@ -300,6 +449,16 @@ def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
            f"{bd['shape']['rows_per_lane']} rows/lane")
     yield ("serving/step_speedup_vs_gather_path", bd["step_speedup"],
            "attend+write vs PR 1 gather+attend+page-writeback")
+    yield ("serving/ttft_chunked_ms", pf["chunked"]["ttft_ms_distinct_median"],
+           f"median over distinct prompt lens {pf['prompt_lens']}; "
+           f"prefill_mode=chunked (c={pf['chunk_size']})")
+    yield ("serving/ttft_scatter_ms", pf["scatter"]["ttft_ms_distinct_median"],
+           "same stream through the PR-2 contiguous-then-scatter path; "
+           "prefill_mode=scatter (re-jits per length)")
+    yield ("serving/ttft_speedup_distinct", pf["ttft_speedup_distinct"],
+           "chunked vs scatter on all-distinct prompt lengths")
+    yield ("serving/ttft_speedup_warm", pf["ttft_speedup_warm"],
+           "chunked vs scatter at a repeated (pre-compiled) length")
 
 
 def bench_paged_serving() -> Iterator[Row]:

@@ -1,10 +1,11 @@
 """End-to-end serving driver (the paper's kind: inference): batched
-requests through a continuous-batching engine, mixed prompt lengths and
-sampling temperatures, with throughput accounting.
+requests through the request-level EngineCore — continuous batching,
+chunked paged prefill and decode mixed in one step batch, mixed prompt
+lengths and sampling temperatures, with throughput accounting.
 
-Run:  PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-9b-smoke]
-      PYTHONPATH=src python examples/serve_lm.py --arch deepseek-7b-smoke \
-          --paged              # block/paged KV cache (docs/architecture.md)
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch deepseek-7b-smoke]
+      PYTHONPATH=src python examples/serve_lm.py --arch falcon-mamba-7b-smoke \
+          --slot               # slot-contiguous engine (any cache layout)
 """
 import argparse
 import time
@@ -14,33 +15,44 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import PagedServingEngine, Request, ServingEngine
+from repro.serving import (EngineCore, Request, ServingEngine,
+                           UnsupportedCacheLayout)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma2-9b-smoke")
+    ap.add_argument("--arch", default="deepseek-7b-smoke")
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--lanes", "--slots", dest="lanes", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
-    ap.add_argument("--paged", action="store_true",
-                    help="paged-KV engine (full-length KV layouts only, "
-                         "e.g. deepseek-7b-smoke)")
-    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--slot", action="store_true",
+                    help="force the slot-contiguous engine (required for "
+                         "SSM-state caches, e.g. falcon-mamba-7b-smoke)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    if args.paged:
-        num_pages = args.slots * args.max_len // args.page_size
-        engine = PagedServingEngine(cfg, params, slots=args.slots,
-                                    page_size=args.page_size,
-                                    num_pages=num_pages,
-                                    max_len=args.max_len)
-    else:
-        engine = ServingEngine(cfg, params, slots=args.slots,
+    if args.slot:
+        engine = ServingEngine(cfg, params, slots=args.lanes,
                                max_len=args.max_len)
+        kind = "slot-contiguous"
+    else:
+        try:
+            engine = EngineCore(
+                cfg, params, lanes=args.lanes, page_size=args.page_size,
+                num_pages=args.lanes * -(-args.max_len // args.page_size),
+                chunk_size=args.chunk_size, max_len=args.max_len)
+            kind = f"EngineCore paged/chunked(c={args.chunk_size})"
+        except UnsupportedCacheLayout as e:
+            # ring/SSM layouts, or a family with no paged chunk step
+            # (e.g. encdec) — the slot engine serves both.
+            print(f"[{e.layout}] falling back to the slot engine")
+            engine = ServingEngine(cfg, params, slots=args.lanes,
+                                   max_len=args.max_len)
+            kind = "slot-contiguous (fallback)"
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -55,8 +67,9 @@ def main():
     done = engine.run()
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.tokens) for r in done)
-    print(f"{cfg.name}: served {len(done)} requests / {n_tok} tokens on "
-          f"{args.slots} slots in {dt:.2f}s ({n_tok / dt:.1f} tok/s, CPU)")
+    print(f"{cfg.name} [{kind}]: served {len(done)} requests / {n_tok} "
+          f"tokens on {args.lanes} lanes in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s, CPU)")
     for r in sorted(done, key=lambda r: r.uid)[:6]:
         mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
         print(f"  req {r.uid:2d} ({mode:7s}, prompt {len(r.prompt):2d}): "

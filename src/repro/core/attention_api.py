@@ -186,7 +186,9 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     ``page_table`` switches the calling convention to *paged*: k/v are page
     pools ``(num_pages, Hkv, page_size, D)``, ``page_table`` is the (B, P)
-    physical page per table slot and ``kv_len`` the (B,) live rows per lane.
+    physical page per table slot and ``kv_len`` the (B,) live rows per lane
+    (query rows included — ``Lq > 1`` is a chunked-prefill block at
+    positions ``kv_len - Lq + i`` with the causal intra-chunk mask implied).
     Only backends whose ``supports`` accepts pool+page-table callers (the
     "paged" kernel) resolve; contiguous backends never see the kwarg.
     """
@@ -299,19 +301,25 @@ def _pallas(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
 
 @register_backend(
     "paged",
-    supports=lambda call: call.has_page_table and call.lq == 1
+    supports=lambda call: call.has_page_table
     and not call.inside_shard_map and not call.has_kv_pos,
-    doc="Paged-attention decode: reads KV pages in place from the pool "
-        "through the (B, P) page table — the Pallas kernel on TPU "
-        "(scalar-prefetch page-indexed DMA), the jnp page-block scan "
-        "elsewhere.  No gathered contiguous cache view is materialised.")
+    doc="Paged attention: reads KV pages in place from the pool through the "
+        "(B, P) page table — the Pallas kernel on TPU (scalar-prefetch "
+        "page-indexed DMA), the jnp page-block scan elsewhere.  Lq == 1 is "
+        "decode; Lq > 1 is a chunked-prefill block (causal intra-chunk mask "
+        "implied).  No gathered contiguous cache view is materialised.")
 def _paged(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
            q_offset, kv_len, kv_pos, page_table):
     assert kv_pos is None, "paged backend has no ring-buffer support"
     assert kv_len is not None, "paged calls must pass per-lane kv_len"
-    # decode is causal by construction (the single query row sits at
-    # position kv_len-1, so the length mask is the causal mask); block_k is
-    # a streaming-scan tile size — page blocks are sized by page_size alone.
+    assert causal or q.shape[2] == 1, \
+        "paged chunks are causal by construction — bidirectional multi-row " \
+        "paged attention is not supported"
+    # Causality is structural: query row i sits at position kv_len - Lq + i,
+    # so the per-row bound `col <= kv_len - Lq + i` is both the length mask
+    # and the causal intra-chunk mask (decode: the plain kv_len mask).
+    # block_k is a streaming-scan tile size — page blocks are sized by
+    # page_size alone.
     del causal, q_offset, block_k
     from repro.kernels.paged_attention import paged_attention
     return paged_attention(q, k, v, page_table, kv_len, scale=scale, cap=cap,

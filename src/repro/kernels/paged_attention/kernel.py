@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: paged-attention decode — KV pages read in place.
+"""Pallas TPU kernel: paged attention — KV pages read in place.
 
 The serving pool keeps KV as ``(num_pages, Hkv, page_size, D)``; each lane's
 logical sequence is its page table row.  The grid is
@@ -9,11 +9,21 @@ and the *page table is a scalar-prefetch operand*: the k/v BlockSpec index
 maps dereference ``tbl_ref[b, j]`` so the DMA engine streams exactly the
 physical page each grid step needs — no gathered contiguous copy of the
 cache is ever built in HBM (the PR-1 gather this kernel deletes).  Each step
-loads one ``(page_size, D)`` page tile, computes the ``(G, page_size)``
-logits tile for the lane's G grouped query heads, and folds it into the
-online-softmax carry ``(m, l, acc)`` in VMEM scratch — the paper's multicore
-partial-max/partial-sum gather (§III-B2) across page blocks.  The last page
-slot normalises and emits.
+loads one ``(page_size, D)`` page tile, computes the ``(G·Lq, page_size)``
+logits tile for the lane's G grouped query heads × Lq query rows, and folds
+it into the online-softmax carry ``(m, l, acc)`` in VMEM scratch — the
+paper's multicore partial-max/partial-sum gather (§III-B2) across page
+blocks.  The last page slot normalises and emits.
+
+One kernel serves both serving phases:
+
+- **decode** (``Lq == 1``): the query row sits at ``kv_len - 1`` and the
+  live-length mask is the causal mask;
+- **chunked prefill** (``Lq > 1``): query row ``i`` sits at absolute
+  position ``kv_len - Lq + i`` (the chunk is the tail of the live rows,
+  already written to its pages), so the mask is the per-row causal bound
+  ``row ≤ kv_len - Lq + i`` — intra-chunk causal on the diagonal pages,
+  plain length gating before them.
 
 Dead pages cost no compute: ``@pl.when(j·page_size < kv_len[b])`` skips
 every slot past the lane's live length (their DMAs still land on a valid
@@ -25,7 +35,7 @@ resident cache *and* the in-place read path.
 
 Like the streaming kernel, the exponential is the paper's LUT decomposition
 (``lut_exp_block``) so softmax runs on the MXU.  VMEM per step is one page
-tile + the (G, page_size) logits + the carry — KiBs, far under budget.
+tile + the (G·Lq, page_size) logits + the carry — KiBs, far under budget.
 """
 from __future__ import annotations
 
@@ -57,7 +67,8 @@ def paged_attention_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
                            m_ref, l_ref, acc_ref, *,
                            scale: float, cap: Optional[float],
                            window: Optional[int], exp_mode: str,
-                           page_size: int, num_slots: int, quantized: bool):
+                           page_size: int, num_slots: int, q_len: int,
+                           quantized: bool):
     b, _, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     exp = _exp_fn(exp_mode, table_ref[...])
     kv_len = len_ref[b]
@@ -71,7 +82,7 @@ def paged_attention_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
     # Live-page gate: slots at or past the lane's length hold no rows.
     @pl.when(j * page_size < kv_len)
     def _step():
-        q = q_ref[...].astype(jnp.float32)                   # (G, D)
+        q = q_ref[...].astype(jnp.float32)                   # (G·Lq, D)
         k = k_ref[...].astype(jnp.float32)                   # (ps, D)
         v = v_ref[...].astype(jnp.float32)                   # (ps, D)
         if quantized:
@@ -79,27 +90,31 @@ def paged_attention_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
             v = v * vs_ref[0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale      # (G, ps)
+            preferred_element_type=jnp.float32) * scale      # (G·Lq, ps)
         if cap is not None:
             s = cap * jnp.tanh(s / cap)
 
-        # Structural row index == absolute position (pages are in table
-        # order), so kv_len is also the causal bound for the last-row query.
+        # Structural column index == absolute position (pages are in table
+        # order); logits row r covers query index r % Lq, whose position is
+        # kv_len - Lq + (r % Lq) — its own causal bound.  Decode (Lq == 1)
+        # degenerates to the plain kv_len length mask.
         row = j * page_size + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
-        mask = row < kv_len
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % q_len
+        q_pos = kv_len - q_len + qi
+        mask = row <= q_pos
         if window is not None:
-            mask &= (kv_len - 1 - row) < window
+            mask &= (q_pos - row) < window
         s = jnp.where(mask, s, NEG_INF)
 
-        m_prev = m_ref[:, :1]                                # (G, 1)
+        m_prev = m_ref[:, :1]                                # (G·Lq, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.where(mask, exp(s - m_new), 0.0)
         alpha = exp(m_prev - m_new)
         l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
         pv = jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)              # (G, D)
+            preferred_element_type=jnp.float32)              # (G·Lq, D)
         acc_ref[...] = acc_ref[...] * alpha + pv
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
@@ -112,7 +127,7 @@ def paged_attention_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "cap", "window", "exp_mode", "group",
+    static_argnames=("scale", "cap", "window", "exp_mode", "group", "q_len",
                      "interpret"))
 def paged_attention_4d(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                        k_scale: Optional[jax.Array],
@@ -120,13 +135,15 @@ def paged_attention_4d(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                        page_table: jax.Array, kv_len: jax.Array,
                        table: jax.Array, *, scale: float,
                        cap: Optional[float], window: Optional[int],
-                       exp_mode: str, group: int,
+                       exp_mode: str, group: int, q_len: int = 1,
                        interpret: bool = False) -> jax.Array:
-    """q: (B, Hkv, G, D); pools: (N, Hkv, ps, D); page_table: (B, P) int32;
-    kv_len: (B,) int32.  → (B, Hkv, G, D) in q's dtype."""
-    b, hkv, g, d = q.shape
+    """q: (B, Hkv, G·Lq, D) with row r ↔ (head group r // Lq, query index
+    r % Lq); pools: (N, Hkv, ps, D); page_table: (B, P) int32; kv_len: (B,)
+    int32.  → (B, Hkv, G·Lq, D) in q's dtype."""
+    b, hkv, rows, d = q.shape
     n, _, ps, dv = v_pool.shape
     p = page_table.shape[1]
+    assert rows == group * q_len, (rows, group, q_len)
     quantized = k_scale is not None
     if not quantized:
         # Uniform kernel arity: dummy 1-page scale pools, never dereferenced
@@ -136,7 +153,8 @@ def paged_attention_4d(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
 
     kernel = functools.partial(
         paged_attention_kernel, scale=scale, cap=cap, window=window,
-        exp_mode=exp_mode, page_size=ps, num_slots=p, quantized=quantized)
+        exp_mode=exp_mode, page_size=ps, num_slots=p, q_len=q_len,
+        quantized=quantized)
 
     def page_map(b_, h, j, tbl, lens):
         del lens
@@ -150,7 +168,7 @@ def paged_attention_4d(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         num_scalar_prefetch=2,                 # page table + per-lane lengths
         grid=(b, hkv, p),
         in_specs=[
-            pl.BlockSpec((None, None, g, d),
+            pl.BlockSpec((None, None, rows, d),
                          lambda b_, h, j, tbl, lens: (b_, h, 0, 0)),
             pl.BlockSpec((None, None, ps, d), page_map),
             pl.BlockSpec((None, None, ps, dv), page_map),
@@ -159,19 +177,19 @@ def paged_attention_4d(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
             pl.BlockSpec((1, LUT_K),
                          lambda b_, h, j, tbl, lens: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((None, None, g, dv),
+        out_specs=pl.BlockSpec((None, None, rows, dv),
                                lambda b_, h, j, tbl, lens: (b_, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, LANES), jnp.float32),    # running max
-            pltpu.VMEM((g, LANES), jnp.float32),    # running denominator
-            pltpu.VMEM((g, dv), jnp.float32),       # weighted accumulator
+            pltpu.VMEM((rows, LANES), jnp.float32),  # running max
+            pltpu.VMEM((rows, LANES), jnp.float32),  # running denominator
+            pltpu.VMEM((rows, dv), jnp.float32),     # weighted accumulator
         ],
     )
 
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, dv), q.dtype),
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,

@@ -1,8 +1,10 @@
 """Public paged-attention entry point: kernel on TPU, jnp reference off it.
 
-Accepts the serving layout directly — q ``(B, Hq, 1, D)``, page pools
+Accepts the serving layout directly — q ``(B, Hq, Lq, D)``, page pools
 ``(N, Hkv, page_size, D)``, a page table ``(B, P)`` and per-lane live
 lengths ``(B,)`` — so the engine hands its pool straight in with no copies.
+``Lq == 1`` is decode; ``Lq > 1`` is a chunked-prefill block whose rows sit
+at positions ``kv_len - Lq + i`` (causal intra-chunk mask implied).
 Optional ``k_scale``/``v_scale`` pools switch on the INT8 path (per-row
 dequant inside the page loop).
 """
@@ -31,10 +33,12 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     v_scale: Optional[jax.Array] = None,
                     block_pages: Optional[int] = None,
                     interpret: Optional[bool] = None) -> jax.Array:
-    """Decode attention through the page table (no gathered cache view).
+    """Attention through the page table (no gathered cache view).
 
-    q: (B, Hq, 1, D); k_pool/v_pool: (N, Hkv, page_size, D); page_table:
-    (B, P) int32; kv_len: (B,) live rows per lane.
+    q: (B, Hq, Lq, D) — a single decode row (Lq == 1) or a chunked-prefill
+    block (Lq > 1) whose row ``i`` holds absolute position
+    ``kv_len - Lq + i``; k_pool/v_pool: (N, Hkv, page_size, D); page_table:
+    (B, P) int32; kv_len: (B,) live rows per lane, query chunk included.
 
     ``interpret`` selects the implementation: ``None`` (default) dispatches
     by platform — the compiled Pallas kernel on TPU, the jnp page-block
@@ -43,7 +47,6 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     natively-compiled kernel and therefore requires a TPU.
     """
     b, hq, lq, d = q.shape
-    assert lq == 1, "paged attention is a decode (single query row) path"
     hkv = k_pool.shape[1]
     assert hq % hkv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}"
     if scale is None:
@@ -65,9 +68,9 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     from repro.kernels.paged_attention.kernel import paged_attention_4d
     g = hq // hkv
     out = paged_attention_4d(
-        q.reshape(b, hkv, g, d), k_pool, v_pool, k_scale, v_scale,
+        q.reshape(b, hkv, g * lq, d), k_pool, v_pool, k_scale, v_scale,
         page_table, kv_len, make_table(), scale=float(scale), cap=cap,
-        window=window, exp_mode=exp_mode, group=g,
+        window=window, exp_mode=exp_mode, group=g, q_len=lq,
         interpret=bool(interpret) if interpret is not None
         else not _use_kernel())
-    return out.reshape(b, hq, 1, v_pool.shape[-1])
+    return out.reshape(b, hq, lq, v_pool.shape[-1])

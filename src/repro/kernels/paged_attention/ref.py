@@ -1,19 +1,31 @@
-"""Pure-jnp paged-attention decode reference (the CPU/CI code path).
+"""Pure-jnp paged-attention reference (the CPU/CI code path).
 
-Semantics shared with the Pallas kernel (``kernel.py``): one query row per
-batch lane attends over that lane's KV pages *in place* in the pool, walking
+Semantics shared with the Pallas kernel (``kernel.py``): each batch lane's
+query rows attend over that lane's KV pages *in place* in the pool, walking
 the page table block by block with an online-softmax running (max, sum,
 accumulator) combine — the paper's multicore partial-max/partial-sum gather
 (§III-B2) applied across page blocks instead of cores.  No contiguous
 ``(B, …, P·page_size, …)`` view of the cache is ever materialised: each scan
 step gathers only ``block_pages`` pages per lane (an O(block) transient that
-feeds compute and dies), so decode traffic is one read of the live KV rows
-plus nothing else.
+feeds compute and dies), so traffic is one read of the live KV rows plus
+nothing else.
+
+Two query shapes share this one code path:
+
+- **decode** — ``Lq == 1``: the single query row sits at position
+  ``kv_len - 1`` and the length mask doubles as the causal mask;
+- **chunked prefill** — ``Lq > 1``: query row ``i`` holds absolute position
+  ``kv_len - Lq + i`` (the chunk is the *last* ``Lq`` live rows, written to
+  pages by the caller before attending), so causality is the per-row bound
+  ``row ≤ kv_len - Lq + i`` — a causal intra-chunk mask on the diagonal
+  block and a plain length mask on everything before it.
 
 Logical row order is the page-table order: the row at table slot ``p``,
-in-page offset ``o`` holds absolute position ``p·page_size + o``, so
-``kv_len`` masking doubles as the causal mask for the (single, last-position)
-query row and sliding windows reduce to a position-difference test.
+in-page offset ``o`` holds absolute position ``p·page_size + o``.  Sliding
+windows reduce to a position-difference test against each query row's
+position.  Rows whose position underflows 0 (idle lanes / right-align
+padding in a mixed serving batch) mask everything and emit zeros — the
+caller never samples them.
 
 INT8 pools dequantise per page block inside the scan body — the resident
 cache stays int8; only the O(block) transient is f32.
@@ -50,17 +62,18 @@ def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
                               k_scale: Optional[jax.Array] = None,
                               v_scale: Optional[jax.Array] = None,
                               block_pages: Optional[int] = None) -> jax.Array:
-    """Single-token decode attention through a page table.
+    """Attention through a page table: decode row or prefill chunk.
 
-    q: (B, Hq, 1, D); k_pool/v_pool: (N, Hkv, page_size, D) page pools with
-    ``Hq % Hkv == 0`` (GQA); page_table: (B, P) physical page per table slot
-    (idle slots may point anywhere valid — ``kv_len`` masks them);
-    kv_len: (B,) live rows per lane.  Optional k_scale/v_scale
-    (N, Hkv, page_size) mark int8 pools (per-row dequant scales).
-    Returns (B, Hq, 1, D) in q's dtype.
+    q: (B, Hq, Lq, D) — query row ``i`` sits at absolute position
+    ``kv_len - Lq + i`` (decode is the ``Lq == 1`` special case);
+    k_pool/v_pool: (N, Hkv, page_size, D) page pools with ``Hq % Hkv == 0``
+    (GQA); page_table: (B, P) physical page per table slot (idle slots may
+    point anywhere valid — the causal/length mask drops them); kv_len: (B,)
+    live rows per lane *including* the query chunk.  Optional
+    k_scale/v_scale (N, Hkv, page_size) mark int8 pools (per-row dequant
+    scales).  Returns (B, Hq, Lq, D) in q's dtype.
     """
     b, hq, lq, d = q.shape
-    assert lq == 1, "paged attention is a decode (single query row) path"
     n, hkv, ps, dv = v_pool.shape
     assert hq % hkv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}"
     g = hq // hkv
@@ -77,8 +90,11 @@ def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
     # >= P·ps >= kv_len for every lane, so the length mask drops them.
     tbl = jnp.pad(page_table, ((0, 0), (0, pad))) if pad else page_table
     kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
-    q_pos = kv_len - 1                                     # last live row
-    qg = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    # (B, Lq) absolute position of each query row (the chunk is the tail of
+    # the live rows); the causal bound per row is q_pos itself.
+    q_pos = (kv_len[:, None] - lq
+             + jnp.arange(lq, dtype=jnp.int32)[None, :])
+    qg = q.astype(jnp.float32).reshape(b, hkv, g, lq, d)
 
     def gather_block(pool, ids):
         blk = jnp.take(pool, ids, axis=0)                  # (B, bp, Hkv, ...)
@@ -95,10 +111,11 @@ def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
             k_blk = k_blk * gather_block(k_scale, ids)[..., None]
             v_blk = v_blk * gather_block(v_scale, ids)[..., None]
         row = j * bp * ps + jnp.arange(bp * ps, dtype=jnp.int32)  # structural
-        mask = row[None, :] < kv_len[:, None]                     # (B, bk)
+        # Causal-within-chunk + length mask in one test: (B, Lq, bk).
+        mask = row[None, None, :] <= q_pos[:, :, None]
         if window is not None:
-            mask &= (q_pos[:, None] - row[None, :]) < window
-        s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_blk,
+            mask &= (q_pos[:, :, None] - row[None, None, :]) < window
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_blk,
                        preferred_element_type=jnp.float32) * scale
         s = softcap(s, cap)
         s = jnp.where(mask[:, None, None], s, NEG_INF)
@@ -107,12 +124,13 @@ def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
         alpha = exp_fn(m - m_new)
         l_new = l * alpha + jnp.sum(pw, axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum(
-            "bhgk,bhkd->bhgd", pw, v_blk, preferred_element_type=jnp.float32)
+            "bhgqk,bhkd->bhgqd", pw, v_blk,
+            preferred_element_type=jnp.float32)
         return (m_new, l_new, acc_new), None
 
-    init = (jnp.full((b, hkv, g), NEG_INF, jnp.float32),
-            jnp.zeros((b, hkv, g), jnp.float32),
-            jnp.zeros((b, hkv, g, dv), jnp.float32))
+    init = (jnp.full((b, hkv, g, lq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, lq), jnp.float32),
+            jnp.zeros((b, hkv, g, lq, dv), jnp.float32))
     # Unrolling lets XLA:CPU fuse/parallelise across page blocks — measured
     # ~4x on memory-bound shapes vs a rolled scan — while the scan skeleton
     # still bounds live transients to O(unroll · block) rows.
@@ -120,4 +138,4 @@ def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
                                   jnp.arange(nb, dtype=jnp.int32),
                                   unroll=min(nb, 8))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.reshape(b, hq, 1, dv).astype(q.dtype)
+    return out.reshape(b, hq, lq, dv).astype(q.dtype)

@@ -1,8 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Spins up the slot-based continuous-batching engine with random weights (or
-a checkpoint) and drives a synthetic request stream — the inference-side
-end-to-end driver.
+Drives the request-level ``EngineCore`` (continuous batching, chunked paged
+prefill, preemption-by-eviction) with random weights (or a checkpoint) over
+a synthetic request stream — the inference-side end-to-end driver.  Cache
+layouts the page pool rejects (ring-buffer sliding windows wider than a
+page, SSM state) fall back to the slot-contiguous ``ServingEngine``.
 """
 from __future__ import annotations
 
@@ -15,17 +17,20 @@ import numpy as np
 from repro.checkpoint import restore
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import Request, ServingEngine
+from repro.serving import (EngineCore, Request, ServingEngine,
+                           UnsupportedCacheLayout)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--lanes", "--slots", dest="lanes", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--chunk-size", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -39,7 +44,19 @@ def main() -> None:
         params = tree["params"]
         print(f"restored checkpoint step {step}")
 
-    eng = ServingEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    try:
+        # ceil per lane: a --max-len request must always fit its worst case
+        pages_per_lane = -(-args.max_len // args.page_size)
+        eng = EngineCore(cfg, params, lanes=args.lanes,
+                         page_size=args.page_size,
+                         num_pages=args.lanes * pages_per_lane,
+                         chunk_size=args.chunk_size, max_len=args.max_len)
+        print(f"engine: EngineCore (paged, chunk={args.chunk_size})")
+    except UnsupportedCacheLayout as e:
+        print(f"engine: ServingEngine (slot-contiguous) — {e}")
+        eng = ServingEngine(cfg, params, slots=args.lanes,
+                            max_len=args.max_len)
+
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(

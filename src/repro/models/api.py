@@ -36,9 +36,12 @@ class Model:
     init_cache: Callable[..., Params]
     prefill: Optional[Callable] = None       # (params, batch, caches) → (logits, state)
     decode_step: Optional[Callable] = None   # (params, token, state, index) → (logits, state)
-    # (params, token (B,), pools, page_table (B, P), index (B,)) →
-    # (logits, pools): batched in-place paged decode (no gathered cache view)
-    decode_paged: Optional[Callable] = None
+    # (params, tokens (B, C), pools, page_table (B, P), kv_len (B,),
+    # q_len (B,)) → (last-row logits (B, V), pools): one unified serving
+    # step — right-aligned chunked prefill, decode (C == 1) and idle lanes
+    # mixed in one batch, KV rows written in place through the table
+    # (EngineCore.step's workhorse; there is no separate paged decode entry)
+    prefill_chunk_paged: Optional[Callable] = None
 
 
 # --------------------------------------------------------------------------
@@ -120,7 +123,7 @@ def build_model(cfg: ModelConfig) -> Model:
         decode_step=functools.partial(
             lambda cfg, params, token, state, index:
             LM.lm_decode_step(cfg, params, token, state, index), cfg),
-        decode_paged=functools.partial(LM.lm_decode_step_paged, cfg),
+        prefill_chunk_paged=functools.partial(LM.lm_prefill_chunk_paged, cfg),
     )
 
 

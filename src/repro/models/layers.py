@@ -164,6 +164,7 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                cache: Optional[Params] = None,
                cache_index: Optional[jax.Array] = None,
                page_table: Optional[jax.Array] = None,
+               q_len: Optional[jax.Array] = None,
                xkv: Optional[jax.Array] = None,
                ) -> Tuple[jax.Array, Optional[Params]]:
     """One attention layer.
@@ -174,10 +175,16 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
     are written at ``cache_index`` and attention runs against the whole cache
     with ``kv_len = cache_index + L``.
     ``page_table``: (B, P) physical-page table — ``cache`` leaves are then
-    *page pools* (num_pages, Hkv, page_size, Dh) shared by all lanes,
-    ``cache_index`` is the (B,) per-lane next row.  Decode writes the one new
-    KV row straight into its physical page and attends in place through the
-    table (no gathered contiguous cache view).
+    *page pools* (num_pages, Hkv, page_size, Dh) shared by all lanes and
+    ``cache_index`` is the (B,) absolute row of the block's first query (so
+    ``kv_len = cache_index + L``).  Each live row's K/V is written straight
+    into its physical page and attention runs in place through the table (no
+    gathered contiguous cache view): L == 1 is decode, L > 1 a chunked
+    prefill block.
+    ``q_len``: (B,) live rows per lane in a right-aligned paged block (rows
+    before ``L - q_len`` are padding: their writes land on the pool's
+    scratch page and their outputs are garbage the caller never reads).
+    ``None`` means every row is live (the decode path).
     ``xkv``: cross-attention source (encoder output); disables cache/rope-k.
     """
     b, l, _ = x.shape
@@ -204,24 +211,43 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
 
     scale_default = cfg.attn_scale if cfg.attn_scale else cfg.d_head ** -0.5
     if cache is not None and page_table is not None:
-        # Paged decode: cache leaves are page pools.  Write the single new
-        # KV row in place at (physical page, in-page offset), then attend
+        # Paged block: cache leaves are page pools.  Write every live row's
+        # K/V in place at its (physical page, in-page offset), then attend
         # through the page table — no gathered (B, …, P·ps, …) view exists.
-        assert l == 1 and xkv is None, "paged attention is decode-only"
-        idx = jnp.asarray(cache_index, jnp.int32)        # (B,) next row
+        # L == 1 is decode; L > 1 a chunked-prefill block whose rows sit at
+        # absolute positions cache_index + i (right-aligned when q_len < L).
+        assert xkv is None, "paged attention has no cross-attention path"
+        idx = jnp.asarray(cache_index, jnp.int32)       # (B,) block start
         ps = cache["k"].shape[2]
-        page_ids = jnp.take_along_axis(
-            page_table, (idx // ps)[:, None], axis=1)[:, 0]       # (B,)
-        off = idx % ps
-        kv_len = idx + 1
+        scratch = cache["k"].shape[0] - 1               # pool's sink page
+        kv_len = idx + l
+        rows = idx[:, None] + jnp.arange(l, dtype=jnp.int32)[None]  # (B, L)
+        if q_len is None:
+            live = jnp.ones(rows.shape, bool)           # decode: all rows
+        else:
+            live = (jnp.arange(l, dtype=jnp.int32)[None]
+                    >= l - jnp.asarray(q_len, jnp.int32)[:, None])
+        # Padding rows (and their possibly-negative positions) must never
+        # touch a live page: clamp the table lookup, then route them to the
+        # scratch page, whose contents are masked by kv_len on every read.
+        slot = jnp.clip(rows // ps, 0, page_table.shape[1] - 1)
+        pids = jnp.where(live, jnp.take_along_axis(page_table, slot, axis=1),
+                         scratch)                       # (B, L)
+        off = rows % ps
+
+        def put(pool, val):
+            # val (B, Hkv, L, …) → rows-major (B, L, Hkv, …); the advanced
+            # (B, L) page/offset indices scatter one row at a time — the
+            # transient is O(B·L), never the (B, P·ps, …) gathered view.
+            return pool.at[pids, :, off].set(
+                jnp.moveaxis(val, 2, 1).astype(pool.dtype))
+
         if "ks" in cache:                    # INT8 pool: values + row scales
             kq_new, ks_new = quantize_kv_rows(k)
             vq_new, vs_new = quantize_kv_rows(v)
             new_cache = {
-                "k": cache["k"].at[page_ids, :, off].set(kq_new[:, :, 0]),
-                "v": cache["v"].at[page_ids, :, off].set(vq_new[:, :, 0]),
-                "ks": cache["ks"].at[page_ids, :, off].set(ks_new[:, :, 0]),
-                "vs": cache["vs"].at[page_ids, :, off].set(vs_new[:, :, 0]),
+                "k": put(cache["k"], kq_new), "v": put(cache["v"], vq_new),
+                "ks": put(cache["ks"], ks_new), "vs": put(cache["vs"], vs_new),
             }
             from repro.kernels.paged_attention import paged_attention
             out = paged_attention(
@@ -230,12 +256,7 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                 exp_mode=cfg.exp_mode, k_scale=new_cache["ks"],
                 v_scale=new_cache["vs"])
         else:
-            new_cache = {
-                "k": cache["k"].at[page_ids, :, off].set(
-                    k[:, :, 0].astype(cache["k"].dtype)),
-                "v": cache["v"].at[page_ids, :, off].set(
-                    v[:, :, 0].astype(cache["v"].dtype)),
-            }
+            new_cache = {"k": put(cache["k"], k), "v": put(cache["v"], v)}
             out = attention(q, new_cache["k"], new_cache["v"],
                             backend=backend_for_config(cfg.attn_backend,
                                                        cfg.attn_impl),

@@ -73,7 +73,8 @@ def _layer_init(key, cfg: ModelConfig, kind: str) -> Params:
 def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
                  pos: jax.Array, cache: Optional[Params],
                  cache_index: Optional[jax.Array], causal: bool,
-                 page_table: Optional[jax.Array] = None
+                 page_table: Optional[jax.Array] = None,
+                 q_len: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     aux = jnp.zeros((), jnp.float32)
     if kind == "mamba":
@@ -84,7 +85,7 @@ def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
     a, new_cache = L.attn_apply(cfg, p["attn"], L.norm_apply(cfg, p["ln1"], x),
                                 kind=kind, pos=pos, causal=causal,
                                 cache=cache, cache_index=cache_index,
-                                page_table=page_table)
+                                page_table=page_table, q_len=q_len)
     if cfg.post_block_norm:
         a = L.norm_apply(cfg, p["ln1_post"], a)
     x = x + a
@@ -156,7 +157,8 @@ def trunk_cache_init(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 pos: jax.Array, caches: Optional[Params] = None,
                 cache_index: Optional[jax.Array] = None, causal: bool = True,
-                page_table: Optional[jax.Array] = None
+                page_table: Optional[jax.Array] = None,
+                q_len: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     kinds, nper, tail = period_layout(cfg)
     shared = params.get("shared_attn")
@@ -179,7 +181,7 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 cfg, kind, pp[str(i)], x, pos=pos,
                 cache=None if pc is None else pc[str(i)],
                 cache_index=cache_index, causal=causal,
-                page_table=page_table)
+                page_table=page_table, q_len=q_len)
             if pc is not None:
                 new_c[str(i)] = lc
             aux = aux + a
@@ -213,7 +215,7 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 cfg, kinds[i % len(kinds)], params["tail"][i], x, pos=pos,
                 cache=None if caches is None else caches["tail"][i],
                 cache_index=cache_index, causal=causal,
-                page_table=page_table)
+                page_table=page_table, q_len=q_len)
             aux_total = aux_total + a
             new_caches["tail"].append(lc)
     return x, (new_caches if caches is not None else None), aux_total
@@ -239,14 +241,20 @@ def lm_apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
              caches: Optional[Params] = None,
              cache_index: Optional[jax.Array] = None,
              causal: bool = True,
-             page_table: Optional[jax.Array] = None
+             page_table: Optional[jax.Array] = None,
+             q_len: Optional[jax.Array] = None,
+             logits_rows: Optional[int] = None
              ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """tokens (B, L) [+ optional (B, Lp, D) prefix] → logits (B, L', V).
 
     ``prefix_embed`` (vlm patches / audio frames) is prepended to the token
     embeddings; returned logits cover the full L' = Lp + L sequence.
-    ``cache_index`` may be a (B,) vector (paged decode: lanes at different
-    positions) — positions then broadcast to (B, L).
+    ``cache_index`` may be a (B,) vector (paged decode / chunked prefill:
+    lanes at different positions) — positions then broadcast to (B, L).
+    ``q_len`` (paged path only): per-lane live rows of a right-aligned block
+    (see ``layers.attn_apply``).  ``logits_rows=n`` unembeds only the last
+    ``n`` positions — serving steps sample one row per lane, and the (B, L,
+    V) logits tensor is the largest activation in the step.
     """
     offset = jnp.asarray(0 if cache_index is None else cache_index, jnp.int32)
     lp = 0 if prefix_embed is None else prefix_embed.shape[1]
@@ -259,8 +267,11 @@ def lm_apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
     pos = offset[..., None] + jnp.arange(x.shape[1], dtype=jnp.int32)
     x, new_caches, aux = trunk_apply(cfg, params["trunk"], x, pos=pos,
                                      caches=caches, cache_index=cache_index,
-                                     causal=causal, page_table=page_table)
+                                     causal=causal, page_table=page_table,
+                                     q_len=q_len)
     x = L.norm_apply(cfg, params["final_norm"], x)
+    if logits_rows is not None:
+        x = x[:, -logits_rows:]
     logits = L.unembed_apply(cfg, params["embed"], params.get("lm_head"), x)
     # Keep the vocab dim sharded through the loss (logits are the largest
     # activation: batch × seq × vocab).
@@ -326,16 +337,34 @@ def lm_decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
     return logits[:, -1], caches
 
 
-def lm_decode_step_paged(cfg: ModelConfig, params: Params, token: jax.Array,
-                         caches: Params, page_table: jax.Array,
-                         index: jax.Array) -> Tuple[jax.Array, Params]:
-    """Batched paged decode: one token (B,) per lane against shared page
-    pools.  ``caches`` leaves are pools (num_pages, Hkv, page_size, Dh),
-    ``page_table`` (B, P) maps each lane's table slots to physical pages and
-    ``index`` (B,) is the per-lane next cache row.  Each layer writes its
-    new KV row in place and attends through the table — no gathered
-    contiguous cache view is ever built (the whole point; see
-    kernels/paged_attention)."""
-    logits, caches, _ = lm_apply(cfg, params, token[:, None], caches=caches,
-                                 cache_index=index, page_table=page_table)
+def lm_prefill_chunk_paged(cfg: ModelConfig, params: Params,
+                           tokens: jax.Array, caches: Params,
+                           page_table: jax.Array, kv_len: jax.Array,
+                           q_len: jax.Array) -> Tuple[jax.Array, Params]:
+    """One unified serving step: a right-aligned (B, C) block of tokens per
+    lane — ``q_len[b]`` live tokens ending at row ``kv_len[b] - 1``, the
+    rest left-padding.  Decode lanes are ``q_len == 1``, prefill lanes carry
+    a chunk of ``q_len ≤ C`` prompt tokens, idle lanes ``q_len == 0``; all
+    phases share this one traced function (C ∈ {1, chunk} — shapes are
+    static, so a stream of arbitrary prompt lengths compiles O(1) step
+    functions instead of one per length bucket).
+
+    Every live row's KV is written in place at its (physical page, in-page
+    offset) through ``page_table`` (B, P) and attention runs through the
+    table with the causal intra-chunk mask (``kernels/paged_attention``);
+    padding rows write to the pool's scratch page.  No contiguous
+    (B, …, n·page_size, …) cache view is ever materialised — chunked prefill
+    is the same in-place dataflow as decode, which is what deletes the old
+    contiguous-prefill-then-scatter copy (``write_prefill``).
+
+    Returns (last-row logits (B, V), caches).  The last row is the lane's
+    newest live token, so the caller samples from it exactly when the step
+    consumed the lane's final known token.
+    """
+    c = tokens.shape[1]
+    offset = jnp.asarray(kv_len, jnp.int32) - c        # block-start row
+    logits, caches, _ = lm_apply(cfg, params, tokens, caches=caches,
+                                 cache_index=offset, page_table=page_table,
+                                 q_len=jnp.asarray(q_len, jnp.int32),
+                                 logits_rows=1)
     return logits[:, -1], caches

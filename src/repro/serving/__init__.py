@@ -1,4 +1,10 @@
-from repro.serving.engine import (PagedServingEngine, Request, ServingEngine)
+from repro.serving.api import (Request, RequestState, StepOutput,
+                               UnsupportedCacheLayout)
+from repro.serving.core import EngineCore
+from repro.serving.engine import PagedServingEngine, ServingEngine
 from repro.serving.paged import PagedKVCache
+from repro.serving.scheduler import Scheduler
 
-__all__ = ["PagedKVCache", "PagedServingEngine", "Request", "ServingEngine"]
+__all__ = ["EngineCore", "PagedKVCache", "PagedServingEngine", "Request",
+           "RequestState", "Scheduler", "ServingEngine", "StepOutput",
+           "UnsupportedCacheLayout"]

@@ -1,0 +1,98 @@
+"""Request-level serving API: the types every serving layer speaks.
+
+The serving surface is three nouns and one verb:
+
+- :class:`Request` — what a client submits (prompt, budget, sampling) and
+  what comes back (``tokens``, ``state``);
+- :class:`~repro.serving.scheduler.Scheduler` — decides, each step, which
+  requests run and how many tokens each contributes (continuous batching,
+  chunked prefill, preemption-by-eviction);
+- :class:`~repro.serving.core.EngineCore` — owns the page pool and the one
+  jitted step function; ``EngineCore.step()`` executes the scheduler's plan
+  and returns a :class:`StepOutput`.
+
+There is deliberately no prefill/decode split in the API: a request is a
+stream of known tokens (prompt ⊕ generated) whose KV rows are written
+through the same paged step in chunks — decode is simply the chunk of
+length one that follows once every known token's row is resident.  That is
+HASTILY's linear-in-length pipelining restated at the request level.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class RequestState(str, enum.Enum):
+    """Observable lifecycle of a request (informational; the scheduler's
+    actual bookkeeping is rows-written vs tokens-known)."""
+    WAITING = "waiting"        # submitted, not yet holding a lane
+    PREFILL = "prefill"        # resident; prompt rows still streaming in
+    DECODE = "decode"          # resident; one new token per step
+    PREEMPTED = "preempted"    # evicted mid-flight; will resume by replay
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``tokens``/``done``/``state`` are filled by
+    the engine; everything else is client input."""
+    uid: int
+    prompt: np.ndarray                 # (Lp,) int32
+    max_new: int = 32
+    temperature: float = 0.0           # 0 = greedy
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    state: RequestState = RequestState.WAITING
+
+    def known_tokens(self) -> np.ndarray:
+        """prompt ⊕ generated — every token whose KV row must eventually be
+        resident.  The scheduler schedules nothing else: a request is a
+        cursor into this stream (preemption just rewinds the cursor)."""
+        return np.concatenate(
+            [np.asarray(self.prompt, np.int64),
+             np.asarray(self.tokens, np.int64)]).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOutput:
+    """What one ``EngineCore.step()`` did."""
+    tokens: Dict[int, int]             # uid → token sampled this step
+    finished: Tuple[int, ...]          # uids completed this step
+    preempted: Tuple[int, ...]         # uids evicted by this step's schedule
+    lanes: int                         # lanes that ran (q_len > 0)
+    # Phase split is by remaining-known at planning (RequestState), not by
+    # q_len: a chunk_size=1 engine still streams *prefill* rows one at a
+    # time, and only the step that consumes the final known token (and
+    # samples) counts as decode.
+    prefill_tokens: int                # prompt-stream chunk tokens
+    decode_tokens: int                 # sampling-step lanes
+
+    @property
+    def mixed(self) -> bool:
+        """True when chunked prefill and decode shared this batch."""
+        return self.prefill_tokens > 0 and self.decode_tokens > 0
+
+
+class UnsupportedCacheLayout(ValueError):
+    """A model's cache pytree cannot be paged.
+
+    Raised at construction (never mid-serve) with the offending ``layout``
+    name attached: ``"ring_buffer_sliding_window"`` (local-attention ring
+    caches are already O(window) — paging them would break the slot = pos
+    mod window invariant) or ``"ssm_state"`` (O(1) per-slot state: no
+    length axis to page).  Serve these configs with the slot-contiguous
+    ``ServingEngine``.
+    """
+
+    def __init__(self, layout: str, model: str, detail: str):
+        self.layout = layout
+        super().__init__(
+            f"paged KV cache: {model} uses an unpageable cache layout "
+            f"[{layout}]: {detail} — serve this config with the "
+            f"slot-contiguous ServingEngine")

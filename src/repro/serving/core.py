@@ -1,0 +1,197 @@
+"""EngineCore: one ``step()`` drives every serving phase through the pool.
+
+The engine owns three things: the page pool (``PagedKVCache``), the
+scheduler, and **one** jitted step function
+
+    step(params, pool, table, tokens, kv_len, q_len) → (logits, pool)
+
+over a right-aligned ``(lanes, C)`` token block — per lane, ``q_len`` live
+tokens ending at row ``kv_len - 1``; dead rows are left-padding whose KV
+writes land on the pool's scratch page.  A decode lane is ``q_len == 1``, a
+chunked-prefill lane streams ``q_len ≤ C`` prompt tokens, an idle lane is
+``q_len == 0``; all of them share the batch, so chunked prefill and decode
+pipeline through the *same* step — the paper's fine-grained
+attention/FFN pipelining (PAPER.md §pipelining) applied at the serving
+level.  C is ``1`` for decode-only steps and ``chunk_size`` whenever any
+lane prefills, and the page table is padded to a power-of-two width, so a
+stream of arbitrary prompt lengths compiles O(1) step functions — the old
+per-prompt-length prefill buckets (and their recompile storm) are gone,
+along with the contiguous-prefill-then-scatter ``write_prefill`` copy.
+
+Sampling stays on the host: greedy picks break exact logit ties to the
+lowest token id (reproducible across engines and platforms), temperature
+sampling draws from a per-engine PRNG stream.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.serving.api import (Request, RequestState, StepOutput,
+                               UnsupportedCacheLayout)
+from repro.serving.paged import PagedKVCache
+from repro.serving.scheduler import Scheduler
+
+
+def greedy_token(logits: jax.Array) -> int:
+    """Deterministic greedy pick: the *lowest* index among joint maxima.
+
+    ``argmax`` tie behaviour is backend-defined; serving promises
+    reproducible token streams across engines and platforms, so exact
+    logit ties break to the lowest token id explicitly.
+    """
+    lg = jnp.asarray(logits)
+    v = lg.shape[-1]
+    hit = lg == jnp.max(lg)
+    return int(jnp.min(jnp.where(hit, jnp.arange(v), v)))
+
+
+def sample_token(logits: jax.Array, temperature: float,
+                 key: jax.Array) -> tuple:
+    """One host-side sample shared by every engine → (token, next key).
+
+    Greedy (temperature ≤ 0) is the lowest-index tie-break above; any
+    change to sampling must stay in this one place or the engines' promised
+    cross-engine token identity silently diverges.
+    """
+    if temperature <= 0.0:
+        return greedy_token(logits), key
+    key, sub = jax.random.split(key)
+    return int(jax.random.categorical(sub, logits / temperature)), key
+
+
+class EngineCore:
+    """Request-level serving engine (see module doc).
+
+    Lifecycle: ``submit(Request)`` → repeated ``step()`` (each returns a
+    :class:`StepOutput`) → finished requests accumulate in ``finished``.
+    ``run()`` drains everything.  Construction raises
+    :class:`~repro.serving.api.UnsupportedCacheLayout` for cache families
+    that cannot page (ring-buffer sliding windows, SSM state) — serve those
+    with the slot-contiguous ``ServingEngine``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, lanes: int = 4,
+                 page_size: int = 16, num_pages: int = 64,
+                 chunk_size: int = 16, max_len: Optional[int] = None,
+                 step_tokens: Optional[int] = None, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        if self.model.prefill_chunk_paged is None:
+            # Typed like the pool's rejections so launchers can catch
+            # narrowly instead of swallowing every ValueError.
+            raise UnsupportedCacheLayout(
+                "no_paged_step", cfg.name,
+                f"the {cfg.family} family exposes no paged chunk step")
+        self.params = params
+        self.lanes = lanes
+        self.max_len = max_len or num_pages * page_size
+        self.kv = PagedKVCache(self.model, num_pages, page_size)
+        self.scheduler = Scheduler(self.kv, lanes=lanes,
+                                   chunk_size=chunk_size,
+                                   step_tokens=step_tokens)
+        self.chunk_size = chunk_size
+        self.key = jax.random.PRNGKey(seed)
+        self.finished: List[Request] = []
+        self.trace_count = 0            # step-fn retraces (compile counter)
+
+        m = self.model
+
+        def step_fn(params, pool, tbl, toks, kv_len, q_len):
+            self.trace_count += 1       # python side effect: counts traces
+            return m.prefill_chunk_paged(params, toks, pool, tbl,
+                                         kv_len, q_len)
+
+        # donated pool: every layer's row writes update in place instead of
+        # copying the whole pool each step.
+        self._step = jax.jit(step_fn, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} exceeds max_len {self.max_len}")
+        self.scheduler.submit(req)
+
+    def _sample(self, logits: jax.Array, temperature: float) -> int:
+        tok, self.key = sample_token(logits, temperature, self.key)
+        return tok
+
+    def step(self) -> StepOutput:
+        """Schedule → one batched model call → sample/finish.  All phases —
+        chunked prefill, decode, admission, preemption — happen here."""
+        plans, preempted = self.scheduler.schedule()
+        if not plans:
+            return StepOutput(tokens={}, finished=(), preempted=preempted,
+                              lanes=0, prefill_tokens=0, decode_tokens=0)
+        c = 1 if all(p.q_len == 1 for p in plans) else self.chunk_size
+        width = max(len(p.run.pages) for p in plans)
+        width = 1 << max(width - 1, 0).bit_length()    # retrace bucketing
+        b, scratch = self.lanes, self.kv.scratch
+
+        toks = np.zeros((b, c), np.int32)
+        kv_len = np.zeros((b,), np.int32)
+        q_len = np.zeros((b,), np.int32)
+        tbl = np.full((b, width), scratch, np.int32)
+        for i, p in enumerate(plans):
+            toks[i, c - p.q_len:] = p.run.next_tokens(p.q_len)
+            kv_len[i] = p.run.rows + p.q_len
+            q_len[i] = p.q_len
+            tbl[i, :len(p.run.pages)] = p.run.pages
+
+        logits, self.kv.pool = self._step(
+            self.params, self.kv.pool, jnp.asarray(tbl), jnp.asarray(toks),
+            jnp.asarray(kv_len), jnp.asarray(q_len))
+
+        out_tokens = {}
+        finished = []
+        # Phase comes from the scheduler (remaining-known at planning), not
+        # from q_len: a chunk_size=1 engine still streams *prefill* rows one
+        # at a time, and only the remaining==1 step is a decode.
+        n_prefill = sum(p.q_len for p in plans
+                        if p.run.req.state is RequestState.PREFILL)
+        n_decode = sum(1 for p in plans
+                       if p.run.req.state is RequestState.DECODE)
+        for i, p in enumerate(plans):
+            run, req = p.run, p.run.req
+            sample = p.sample             # before the cursor moves
+            run.rows += p.q_len
+            if not sample:
+                continue
+            tok = self._sample(logits[i], req.temperature)
+            req.tokens.append(int(tok))
+            out_tokens[req.uid] = int(tok)
+            if (len(req.tokens) >= req.max_new
+                    or (req.eos_id is not None and int(tok) == req.eos_id)):
+                req.done = True
+                finished.append(req.uid)
+                self.finished.append(req)
+                self.scheduler.finish(run)
+        return StepOutput(tokens=out_tokens, finished=tuple(finished),
+                          preempted=preempted, lanes=len(plans),
+                          prefill_tokens=n_prefill, decode_tokens=n_decode)
+
+    def run(self, max_steps: int = 100_000) -> List[Request]:
+        steps = 0
+        while self.scheduler.has_work():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("serving did not drain")
+        return self.finished
+
+    # -------------------------------------------------------- introspection
+    @property
+    def pages_in_use(self) -> int:
+        return self.kv.num_pages - len(self.kv.free)
+
+    @property
+    def page_tables(self) -> List[List[int]]:
+        """Live page table per resident request (scheduler ticket order)."""
+        return [list(r.pages) for r in self.scheduler.running]

@@ -1,28 +1,26 @@
-"""Batched serving engines: continuous batching over KV/SSM caches.
+"""Deprecated engine classes — thin compatibility over ``EngineCore``.
 
-Two engines share one request lifecycle (submit → admit → batched decode →
-recycle):
+The serving API is now request-level: build an
+:class:`~repro.serving.core.EngineCore` and drive ``step()`` — one call
+that packs chunked prefill and decode into the same paged batch (see
+``serving/core.py`` and docs/architecture.md §Serving).  This module keeps
+the two pre-redesign engine classes alive for one release:
 
-``ServingEngine`` — slot-contiguous: B slots, each slot owns a full
-``max_len`` stretch of every cache leaf.  Simple, supports every family
-(SSM states, ring-buffer local windows, INT8 caches), but reserves
-worst-case memory per slot and decodes against ``max_len`` rows always.
+``PagedServingEngine`` — a *thin shim* over ``EngineCore``: same
+constructor, same ``submit``/``step``/``run`` surface, same token streams;
+prefill now streams through the paged chunk step instead of the old
+contiguous-prefill-then-scatter copy.
 
-``PagedServingEngine`` — block/paged KV (``serving/paged.py``): caches live
-in a page pool with free-list allocation and per-slot page tables; decode
-reads pages *in place* through the table (``kernels/paged_attention``) and
-writes each lane's one new KV row straight into its physical page — no
-per-step gathered cache copy.  The serving-side realisation of HASTILY's
-linear-memory pipelining; restricted to cache layouts where every leaf
-grows with sequence length.
-
-Both engines decode one token for all active slots per ``step()`` — compute
-never waits for the slowest request, finished slots are recycled
-immediately.  Sampling: greedy or temperature (per-request).
+``ServingEngine`` — the slot-contiguous engine, kept whole (not a shim):
+it is still the only way to serve cache layouts the page pool rejects
+(ring-buffer sliding windows, SSM state — ``UnsupportedCacheLayout``).
+B slots, each owning a full ``max_len`` stretch of every cache leaf;
+b=1 prefill jitted per prompt-length bucket.  Prefer ``EngineCore``
+wherever the layout pages.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Any, List, Optional
 
 import jax
@@ -31,23 +29,15 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import build_model
-from repro.serving.paged import PagedKVCache, cache_batch_axes
+from repro.serving.api import Request, RequestState
+from repro.serving.core import EngineCore, greedy_token, sample_token
+from repro.serving.paged import cache_batch_axes
 
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                 # (Lp,) int32
-    max_new: int = 32
-    temperature: float = 0.0           # 0 = greedy
-    eos_id: Optional[int] = None
-    # filled by the engine:
-    tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+__all__ = ["Request", "ServingEngine", "PagedServingEngine"]
 
 
 class _EngineBase:
-    """Request lifecycle shared by the slot-contiguous and paged engines."""
+    """Request lifecycle of the slot-contiguous engine."""
 
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int,
                  max_len: int, seed: int):
@@ -67,7 +57,8 @@ class _EngineBase:
 
         m = self.model
 
-        # b=1 prefill, jitted once per prompt-length bucket
+        # b=1 prefill, jitted once per prompt-length bucket — the recompile
+        # cost EngineCore's chunked prefill exists to avoid.
         def prefill_one(params, tokens, caches1):
             logits, caches1 = m.prefill(params, {"tokens": tokens}, caches1)
             return logits, caches1
@@ -77,27 +68,16 @@ class _EngineBase:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    @staticmethod
-    def greedy_token(logits: jax.Array) -> int:
-        """Deterministic greedy pick: the *lowest* index among joint maxima.
-
-        ``argmax`` tie behaviour is backend-defined; serving promises
-        reproducible token streams across engines and platforms, so exact
-        logit ties break to the lowest token id explicitly.
-        """
-        lg = jnp.asarray(logits)
-        v = lg.shape[-1]
-        hit = lg == jnp.max(lg)
-        return int(jnp.min(jnp.where(hit, jnp.arange(v), v)))
+    # shared with EngineCore so both surfaces stay token-identical
+    greedy_token = staticmethod(greedy_token)
 
     def _sample(self, logits: jax.Array, temperature: float) -> int:
-        if temperature <= 0.0:
-            return self.greedy_token(logits)
-        self.key, sub = jax.random.split(self.key)
-        return int(jax.random.categorical(sub, logits / temperature))
+        tok, self.key = sample_token(logits, temperature, self.key)
+        return tok
 
     def _finish(self, req: Request) -> None:
         req.done = True
+        req.state = RequestState.FINISHED
         self.finished.append(req)
 
     @staticmethod
@@ -121,6 +101,10 @@ class _EngineBase:
 
 class ServingEngine(_EngineBase):
     """Slot-contiguous engine: each of B slots owns ``max_len`` cache rows.
+
+    Deprecated in favour of ``EngineCore`` for every pageable cache layout;
+    kept whole because ring-buffer sliding-window and SSM caches cannot
+    page (their per-slot state is already O(window) / O(1)).
 
     Slot mechanics: the model's caches are batched pytrees (leading dim B).
     Prefill runs on a b=1 view and is scattered into the slot index; decode
@@ -180,6 +164,7 @@ class ServingEngine(_EngineBase):
             if self._should_finish(req, int(tok)):
                 self._finish(req)
                 continue
+            req.state = RequestState.DECODE
             self.active[slot] = req
             self.pos[slot] = lp
             self.last_tok[slot] = int(tok)
@@ -206,119 +191,68 @@ class ServingEngine(_EngineBase):
         return len(live)
 
 
-class PagedServingEngine(_EngineBase):
-    """Paged-KV engine: page pool + free list + per-slot page tables.
+class PagedServingEngine:
+    """Deprecated shim: ``PagedServingEngine(...)`` ≡ ``EngineCore(...)``.
 
-    Admission reserves each request's worst-case page count
-    (ceil((prompt + max_new) / page_size)), so the lazy per-token page
-    allocation during decode can never fail; physical pages are taken from
-    the free list only as the sequence grows and all return on completion.
-
-    Decode is *in place*: ``(pool, page_table, positions)`` go straight into
-    the model's batched paged decode step, which writes each lane's single
-    new KV row at its (physical page, in-page offset) and attends through
-    the page table (``kernels/paged_attention`` — online-softmax combine
-    across page blocks).  No gathered contiguous ``(B, …, P·page_size, …)``
-    cache view is ever materialised; the per-step cache traffic is one read
-    of the live rows plus a one-row write, instead of PR 1's
-    O(B·H·Lmax·D) gather + page write-back copy.  The table is padded to a
-    power-of-two width (bounds jit retraces) with the pool's scratch page;
-    idle lanes point at scratch so their garbage writes never touch a live
-    page, and padding slots are masked by ``kv_len`` inside the kernel.
+    One release of constructor/attribute compatibility for PR-2 callers:
+    ``slots`` maps to ``lanes``, ``submit``/``step``/``run`` and the
+    introspection surface (``queue``/``active``/``finished``/``kv``/
+    ``pages_in_use``/``page_tables``) delegate to the core.  Token streams
+    are unchanged; prefill now streams through the paged chunk step (no
+    contiguous-then-scatter copy, no per-prompt-length recompiles).
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
                  page_size: int = 16, num_pages: int = 64,
-                 max_len: Optional[int] = None, seed: int = 0):
-        max_len = max_len or num_pages * page_size
-        super().__init__(cfg, params, slots=slots, max_len=max_len, seed=seed)
-        if self.model.decode_paged is None:
-            raise ValueError(
-                f"paged KV cache: {cfg.name} ({cfg.family}) has no batched "
-                f"paged decode step — serve it with the slot-contiguous "
-                f"engine")
-        self.kv = PagedKVCache(self.model, num_pages, page_size)
-        self.page_tables: List[List[int]] = [[] for _ in range(slots)]
-        self._reserved: List[int] = [0] * slots
+                 max_len: Optional[int] = None, seed: int = 0,
+                 chunk_size: Optional[int] = None):
+        warnings.warn(
+            "PagedServingEngine is deprecated: build repro.serving.EngineCore"
+            " directly (same constructor, request-level step API)",
+            DeprecationWarning, stacklevel=2)
+        self.core = EngineCore(cfg, params, lanes=slots, page_size=page_size,
+                               num_pages=num_pages, max_len=max_len,
+                               seed=seed, chunk_size=chunk_size or page_size)
+        self.cfg = cfg
+        self.slots = slots
 
-        m = self.model
-
-        def decode_paged(params, pool, tbl, toks, idxs):
-            return m.decode_paged(params, toks, pool, tbl, idxs)
-
-        # donated pool: each layer's one-row write updates in place instead
-        # of copying the whole pool every step.
-        self._decode = jax.jit(decode_paged, donate_argnums=(1,))
-
-    def _admit(self) -> None:
-        for slot in range(self.slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue[0]
-            lp = len(req.prompt)
-            assert lp + req.max_new <= self.max_len, "prompt too long"
-            need = self.kv.pages_needed(lp + req.max_new)
-            if need > self.kv.num_pages:
-                raise ValueError(
-                    f"request {req.uid} needs {need} pages "
-                    f"(> pool of {self.kv.num_pages}) — raise num_pages")
-            if not self.kv.can_reserve(need):
-                break                      # FIFO: wait for pages to free up
-            self.queue.pop(0)
-            self.kv.reserve(need)
-            n0 = self.kv.pages_needed(lp)
-            fresh = self.model.init_cache(1, n0 * self.kv.page_size)
-            logits, c1 = self._prefill(
-                self.params, jnp.asarray(req.prompt, jnp.int32)[None], fresh)
-            pages = [self.kv.alloc() for _ in range(n0)]
-            self.kv.write_prefill(c1, pages)
-            tok = self._sample(logits[0], req.temperature)
-            req.tokens.append(int(tok))
-            if self._should_finish(req, int(tok)):
-                self.kv.release(pages, need)
-                self._finish(req)
-                continue
-            self.active[slot] = req
-            self.pos[slot] = lp
-            self.last_tok[slot] = int(tok)
-            self.page_tables[slot] = pages
-            self._reserved[slot] = need
+    # delegated API ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.core.submit(req)
 
     def step(self) -> int:
-        self._admit()
-        live = [s for s in range(self.slots) if self.active[s] is not None]
-        if not live:
-            return 0
-        ps = self.kv.page_size
-        for s in live:                       # lazy growth: one page at most
-            if self.pos[s] >= len(self.page_tables[s]) * ps:
-                self.page_tables[s].append(self.kv.alloc())
-        width = max(len(self.page_tables[s]) for s in live)
-        width = 1 << (width - 1).bit_length()          # retrace bucketing
-        tbl = np.full((self.slots, width), self.kv.scratch, np.int32)
-        for s in live:
-            pt = self.page_tables[s]
-            tbl[s, :len(pt)] = pt
-        toks = jnp.asarray(self.last_tok, jnp.int32)
-        idxs = jnp.asarray(
-            [self.pos[s] if self.active[s] is not None else 0
-             for s in range(self.slots)], jnp.int32)
-        logits, self.kv.pool = self._decode(self.params, self.kv.pool,
-                                            jnp.asarray(tbl), toks, idxs)
-        for s in live:
-            req = self.active[s]
-            tok = self._sample(logits[s], req.temperature)
-            req.tokens.append(int(tok))
-            self.pos[s] += 1
-            self.last_tok[s] = int(tok)
-            if self._should_finish(req, int(tok)):
-                self._finish(req)
-                self.active[s] = None
-                self.kv.release(self.page_tables[s], self._reserved[s])
-                self.page_tables[s] = []
-                self._reserved[s] = 0
-        return len(live)
+        return self.core.step().lanes
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        return self.core.run(max_steps)
+
+    # compat introspection --------------------------------------------------
+    @property
+    def kv(self):
+        return self.core.kv
+
+    @property
+    def max_len(self) -> int:
+        return self.core.max_len
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.core.finished
+
+    @property
+    def queue(self) -> List[Request]:
+        return [r.req for r in self.core.scheduler.waiting]
+
+    @property
+    def active(self) -> List[Optional[Request]]:
+        live: List[Optional[Request]] = [
+            r.req for r in self.core.scheduler.running]
+        return live + [None] * (self.slots - len(live))
+
+    @property
+    def page_tables(self) -> List[List[int]]:
+        return self.core.page_tables
 
     @property
     def pages_in_use(self) -> int:
-        return self.kv.num_pages - len(self.kv.free)
+        return self.core.pages_in_use

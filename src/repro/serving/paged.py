@@ -4,8 +4,9 @@ The slot-contiguous engine reserves ``max_len`` cache rows per slot up front,
 so one long-context slot dictates the memory bill of every short request —
 the serving-side analogue of the O(l²) logit matrix HASTILY streams away.
 Here the resident KV store is a *pool* of fixed-size pages; each sequence
-owns just the pages its current length needs (a page table per slot) and
-decode attends over each lane's live rows *in place* through the table
+owns just the pages its current length needs (a page table per request) and
+every phase — chunked prefill and decode alike — writes its KV rows *in
+place* through the table and attends the same way
 (``kernels/paged_attention``).  Linear-in-live-tokens memory is the paper's
 O(l) pipelining restated for the cache.
 
@@ -14,24 +15,27 @@ Mechanics
 - The pool is ``model.init_cache(num_pages + 1, page_size)``: every cache
   leaf keeps its family layout, with the batch dim reinterpreted as the page
   id and the length dim as the in-page offset.  Page ``num_pages`` is a
-  scratch page — writes from inactive batch lanes land there.
+  scratch page — writes from idle lanes and right-align padding rows land
+  there (and are masked by ``kv_len`` on every read).
 - A free list (a min-heap: pages are handed out lowest-id-first, so reuse is
   deterministic and allocations cluster at the bottom of the pool) hands out
-  physical pages; admission *reserves* the worst-case page count
-  (ceil((prompt+max_new)/page_size)) so lazy per-token allocation can never
-  deadlock mid-decode, while physical pages are only taken as the sequence
-  actually grows.
-- Decode never touches this module: the engine hands ``(pool, page_table,
-  positions)`` straight to the model's paged decode step, which reads pages
-  in place (``kernels/paged_attention``) and writes the one new KV row at
-  its (physical page, offset).  ``gather`` — the materialised contiguous
-  view (B, …, P·page_size, …) — survives only as the oracle for
-  cross-checking the in-place path against the naive backends.
+  physical pages.  Allocation is lazy — a page is taken only as a sequence's
+  rows actually reach it — and the scheduler preempts-by-eviction when the
+  pool runs dry, so there is no up-front worst-case reservation.
+- This module never touches jax compute: the engine hands ``(pool,
+  page_table, kv_len, q_len)`` straight to the model's unified paged step,
+  which reads pages in place and writes each live row at its (physical
+  page, offset).  ``gather`` — the materialised contiguous
+  (B, …, P·page_size, …) view — survives only as the oracle for
+  cross-checking the in-place path against the naive backends.  (The old
+  ``write_prefill`` contiguous-then-scatter copy is gone: chunked prefill
+  writes pages directly.)
 
-Only cache layouts whose every leaf grows with ``max_len`` are supported
+Only cache layouts whose every leaf grows with ``max_len`` are pageable
 (standard bf16/f32 and INT8-quantised KV caches).  SSM states are O(1) per
 slot (nothing to page) and ring-buffer sliding-window caches are already
-O(window); both are rejected at construction with a clear error.
+O(window); both raise :class:`~repro.serving.api.UnsupportedCacheLayout`
+at construction.
 """
 from __future__ import annotations
 
@@ -40,6 +44,8 @@ from typing import Any, List
 
 import jax
 import jax.numpy as jnp
+
+from repro.serving.api import UnsupportedCacheLayout
 
 Pytree = Any
 
@@ -57,6 +63,65 @@ def cache_batch_axes(tree: Pytree) -> Pytree:
         tree)
 
 
+def _check_pageable(model, page_size: int) -> Pytree:
+    """Validate that every cache leaf scales with ``max_len``; → length axes.
+
+    The pool only ever builds caches at ``max_len = page_size``, so the
+    doubling probe that discovers each leaf's length axis must stay *at or
+    below* page_size (``page_size/2`` vs ``page_size`` for even pages) —
+    probing past it would materialise ring buffers the pool will never see
+    and falsely reject ``window == page_size`` configs.  The supported
+    boundary is ``window >= page_size``.
+
+    Classifies the failure so serving errors name the layout, not a shape:
+    a ``pos`` leaf anywhere (or a structure that changes as ``max_len``
+    approaches ``page_size``) is a ring-buffer sliding-window cache; a
+    leaf with no length axis at all is SSM state.
+    """
+    name = model.cfg.name
+    axes_of = cache_batch_axes
+    if page_size % 2 == 0 and page_size >= 2:
+        lens = (page_size // 2, page_size)
+    else:                       # odd pages: over-strict probe past the pool
+        lens = (page_size, 2 * page_size)
+    small = jax.eval_shape(lambda: model.init_cache(1, lens[0]))
+    big = jax.eval_shape(lambda: model.init_cache(1, lens[1]))
+
+    ring = [jax.tree_util.keystr(kp)
+            for kp, _ in jax.tree_util.tree_leaves_with_path(big)
+            if any(str(getattr(k, "key", "")) == "pos" for k in kp)]
+    if ring:
+        raise UnsupportedCacheLayout(
+            "ring_buffer_sliding_window", name,
+            f"leaf {ring[0]} carries ring-buffer slot positions "
+            f"(window narrower than page_size={page_size})")
+    if (jax.tree_util.tree_structure(small)
+            != jax.tree_util.tree_structure(big)):
+        raise UnsupportedCacheLayout(
+            "ring_buffer_sliding_window", name,
+            f"cache *structure* changes with max_len (ring-buffer local "
+            f"windows appearing at or below page_size={page_size})")
+
+    def length_axis(kp, a, b, ax):
+        diff = [i for i, (da, db) in enumerate(zip(a.shape, b.shape))
+                if da != db]
+        path = jax.tree_util.keystr(kp)
+        if not diff:
+            raise UnsupportedCacheLayout(
+                "ssm_state", name,
+                f"leaf {path} (shape {a.shape}) is O(1) per slot — no "
+                f"length axis to page")
+        if diff != [ax + 2] or b.shape[ax + 2] != 2 * a.shape[ax + 2]:
+            raise UnsupportedCacheLayout(
+                "non_length_scaling", name,
+                f"leaf {path} (shape {a.shape}) does not scale with "
+                f"max_len on axis {ax + 2}")
+        return ax + 2
+
+    return jax.tree_util.tree_map_with_path(
+        length_axis, small, big, axes_of(small))
+
+
 class PagedKVCache:
     """Page pool + free list over a model's cache pytree (see module doc)."""
 
@@ -64,91 +129,42 @@ class PagedKVCache:
         self.model = model
         self.num_pages = num_pages
         self.page_size = page_size
-        self.scratch = num_pages                    # sink page for idle lanes
-        self.pool = model.init_cache(num_pages + 1, page_size)
-        self.axes = cache_batch_axes(self.pool)   # page id plays batch here
+        self.scratch = num_pages                    # sink page for idle rows
         # Length axis per leaf, discovered by growing max_len: paging is only
         # sound if every leaf scales with it (k/v rows, quant scales, …).
-        small = jax.eval_shape(lambda: model.init_cache(1, page_size))
-        big = jax.eval_shape(lambda: model.init_cache(1, 2 * page_size))
-        if (jax.tree_util.tree_structure(small)
-                != jax.tree_util.tree_structure(big)):
-            raise ValueError(
-                f"paged KV cache: {model.cfg.name} cache *structure* changes "
-                f"with max_len (e.g. ring-buffer local windows appearing "
-                f"around page_size={page_size}) — serve this config with the "
-                f"slot-contiguous engine")
-        def length_axis(kp, a, b, ax):
-            diff = [i for i, (da, db) in enumerate(zip(a.shape, b.shape))
-                    if da != db]
-            if diff != [ax + 2] or b.shape[ax + 2] != 2 * a.shape[ax + 2]:
-                path = jax.tree_util.keystr(kp)
-                raise ValueError(
-                    f"paged KV cache: leaf {path} (shape {a.shape}) does not "
-                    f"scale with max_len on axis {ax + 2} — SSM states and "
-                    f"ring-buffer sliding-window caches are not pageable; "
-                    f"serve this config with the slot-contiguous engine")
-            return ax + 2
-        self.laxes = jax.tree_util.tree_map_with_path(
-            length_axis, small, big, self.axes)
+        # Raises UnsupportedCacheLayout (with the layout name) otherwise.
+        self.laxes = _check_pageable(model, page_size)
+        self.pool = model.init_cache(num_pages + 1, page_size)
+        self.axes = cache_batch_axes(self.pool)   # page id plays batch here
         self.free: List[int] = list(range(num_pages))   # min-heap by page id
-        self.reserved = 0
-
-        def write(pool, caches1, ids):
-            n, ps = ids.shape[0], self.page_size
-
-            def wr(pl, one, ax, lax):
-                s = one.shape
-                assert s[ax] == 1 and s[lax] == n * ps, (s, ax, lax)
-                one = one.reshape(s[:lax] + (n, ps) + s[lax + 1:])
-                one = jnp.squeeze(one, ax)          # page axis now at lax-1
-                one = jnp.moveaxis(one, lax - 1, ax)
-                return pl.at[(slice(None),) * ax + (ids,)].set(
-                    one.astype(pl.dtype))
-
-            return jax.tree.map(wr, pool, caches1, self.axes, self.laxes)
-
-        # donated pool: admission writes n0 pages in place instead of eagerly
-        # copying the whole pool once per cache leaf (retraces per page count,
-        # like the per-length prefill buckets).
-        self._write = jax.jit(write, donate_argnums=(0,))
 
     # ------------------------------------------------------------ free list
     def pages_needed(self, tokens: int) -> int:
         return -(-tokens // self.page_size)
 
-    def can_reserve(self, n: int) -> bool:
-        return self.reserved + n <= self.num_pages
-
-    def reserve(self, n: int) -> None:
-        assert self.can_reserve(n), (n, self.reserved, self.num_pages)
-        self.reserved += n
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
 
     def alloc(self) -> int:
-        # Reservations guarantee this pop never fails mid-decode.  Lowest
-        # id first (not LIFO): page ids stay dense at the bottom of the
-        # pool for locality, and allocation order is deterministic under
-        # any release order — tests can predict physical layout.
+        # Lowest id first (not LIFO): page ids stay dense at the bottom of
+        # the pool for locality, and allocation order is deterministic under
+        # any release order — tests can predict physical layout.  The
+        # scheduler checks ``free_pages`` (and preempts) before popping.
         return heapq.heappop(self.free)
 
-    def release(self, pages: List[int], reserved: int) -> None:
+    def release(self, pages: List[int]) -> None:
         for p in pages:
             heapq.heappush(self.free, p)
-        self.reserved -= reserved
 
     # ------------------------------------------------------------- pool ops
-    def write_prefill(self, caches1: Pytree, pages: List[int]) -> None:
-        """Scatter a b=1 contiguous prefill cache (length n·ps) into pages."""
-        self.pool = self._write(self.pool, caches1,
-                                jnp.asarray(pages, jnp.int32))
-
     def gather(self, pool: Pytree, tbl: jax.Array) -> Pytree:
         """Page tables (B, P) → contiguous view caches (B, …, P·ps, …).
 
-        This is the O(B·H·L·D) copy the in-place decode path deleted; it
-        remains only as the oracle for cross-checking ``paged_attention``
-        against the contiguous backends (tests, benchmarks).  Nothing on
-        the decode hot path calls it.
+        This is the O(B·H·L·D) copy the in-place paths deleted; it remains
+        only as the oracle for cross-checking ``paged_attention`` against
+        the contiguous backends (tests, benchmarks).  Nothing on the serving
+        hot path — prefill or decode — calls it.
         """
         def g(leaf, ax, lax):
             out = jnp.take(leaf, tbl, axis=ax)      # B,P inserted at ax

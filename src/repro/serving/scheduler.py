@@ -1,0 +1,213 @@
+"""Continuous-batching scheduler: requests → per-step chunk plans.
+
+One rule unifies every serving phase: a request is a cursor (``rows``) into
+its stream of known tokens (prompt ⊕ generated).  Each step the scheduler
+grants a resident request the next ``q_len = min(chunk, remaining, budget)``
+tokens of that stream; the engine writes their KV rows through the page
+table and samples a new token exactly when the cursor reaches the end of
+the stream.  Prompt prefill is the cursor sweeping the prompt in fixed-size
+chunks; decode is the degenerate chunk of one; resuming a preempted request
+is the same sweep over prompt ⊕ already-generated tokens (recompute
+preemption — deterministic greedy regenerates the identical suffix).  There
+is no separate prefill entry point left to schedule.
+
+Policy
+------
+- **FCFS admission** against the page-pool budget: the waiting queue is
+  ordered by arrival ticket; the head is admitted when a lane is free and
+  the pool can hold its *known* tokens (its generation growth is allocated
+  lazily, page by page).
+- **Token-budget fairness** (``step_tokens``): decode lanes are planned
+  first — one token each, so prefill bursts never starve resident decodes —
+  then prefill lanes split the remaining budget into chunks, oldest first.
+- **Preemption by eviction**: pages are granted in strict ticket order; when
+  the pool runs dry the *youngest* resident request is evicted — its pages
+  return to the free list, its cursor rewinds to zero, and it re-enters the
+  waiting queue (by its original ticket) to be replayed later.  The oldest
+  resident request can always evict its way to the whole pool, so progress
+  is guaranteed as long as any single request fits (checked at submit).
+
+The scheduler owns accounting only — queues, tickets, page tables; the
+jax arrays live in :class:`~repro.serving.core.EngineCore`.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.api import Request, RequestState
+from repro.serving.paged import PagedKVCache
+
+
+@dataclasses.dataclass(eq=False)
+class RunningRequest:
+    """A resident request: its lane, pages, and cursor into known tokens.
+
+    ``eq=False``: queue membership (`remove`, `in`) must be identity —
+    field-wise dataclass equality would tuple-compare prompt ndarrays and
+    raise on duplicate uids."""
+    req: Request
+    ticket: int
+    pages: List[int] = dataclasses.field(default_factory=list)
+    rows: int = 0                     # KV rows already resident
+
+    def known(self) -> int:
+        return len(self.req.prompt) + len(self.req.tokens)
+
+    def remaining(self) -> int:
+        return self.known() - self.rows
+
+    def next_tokens(self, n: int):
+        """The next ``n`` tokens of the known stream (prompt ⊕ generated)
+        starting at the cursor — O(n), without materialising the whole
+        stream (a decode lane reads 1 token per step, not O(L))."""
+        lp = len(self.req.prompt)
+        head = np.asarray(self.req.prompt[self.rows:self.rows + n],
+                          np.int32)
+        need = n - len(head)
+        if need <= 0:
+            return head
+        off = max(0, self.rows - lp)
+        tail = np.asarray(self.req.tokens[off:off + need], np.int32)
+        return np.concatenate([head, tail]) if len(head) else tail
+
+
+@dataclasses.dataclass(frozen=True)
+class LanePlan:
+    """One lane of one step: stream ``q_len`` tokens of ``run``'s cursor."""
+    run: RunningRequest
+    q_len: int
+
+    @property
+    def sample(self) -> bool:
+        # The step consumes through the last known token → its final-row
+        # logits are the next-token distribution.
+        return self.run.rows + self.q_len == self.run.known()
+
+
+class Scheduler:
+    """Continuous batching over a :class:`PagedKVCache` (see module doc)."""
+
+    def __init__(self, kv: PagedKVCache, *, lanes: int = 4,
+                 chunk_size: int = 16,
+                 step_tokens: Optional[int] = None):
+        assert chunk_size >= 1
+        self.kv = kv
+        self.lanes = lanes
+        self.chunk_size = chunk_size
+        # Fairness knob: max tokens per step across all lanes.  The default
+        # admits every decode lane plus one full prefill chunk — prompts
+        # stream through spare capacity without monopolising the batch.
+        self.step_tokens = step_tokens or (lanes + chunk_size)
+        self.waiting: List[RunningRequest] = []     # ordered by ticket
+        self.running: List[RunningRequest] = []     # ordered by ticket
+        self._ticket = 0
+        self.preempted_count = 0                    # evictions, lifetime
+        self._evicted_now: List[int] = []           # within one schedule()
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            # known() == 0 would plan q_len = 0 forever: a lane-wedging
+            # livelock, not a servable request.
+            raise ValueError(f"request {req.uid}: empty prompt")
+        worst = len(req.prompt) + req.max_new
+        if self.kv.pages_needed(worst) > self.kv.num_pages:
+            raise ValueError(
+                f"request {req.uid} needs {self.kv.pages_needed(worst)} "
+                f"pages worst-case (> pool of {self.kv.num_pages}) — raise "
+                f"num_pages")
+        req.state = RequestState.WAITING
+        self.waiting.append(RunningRequest(req, self._ticket))
+        self._ticket += 1
+
+    def finish(self, run: RunningRequest) -> None:
+        """Release a completed request's lane and pages."""
+        self.running.remove(run)
+        self.kv.release(run.pages)
+        run.pages = []
+        run.req.state = RequestState.FINISHED
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ------------------------------------------------------------- internal
+    def _preempt_youngest(self, older_than: int) -> bool:
+        """Evict the youngest resident request with ticket > ``older_than``;
+        its cursor rewinds and it re-queues by ticket (recompute preemption).
+        → False when no such victim exists."""
+        victims = [r for r in self.running if r.ticket > older_than]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: r.ticket)
+        self.running.remove(victim)
+        self.kv.release(victim.pages)
+        victim.pages = []
+        victim.rows = 0
+        victim.req.state = RequestState.PREEMPTED
+        self.preempted_count += 1
+        self._evicted_now.append(victim.req.uid)
+        bisect.insort(self.waiting, victim, key=lambda r: r.ticket)
+        return True
+
+    def _grant_pages(self, run: RunningRequest, rows_after: int) -> bool:
+        """Extend ``run``'s page table to cover ``rows_after`` rows, evicting
+        younger residents if the free list runs dry.  → False if ``run``
+        itself lost the fight (only ever happens to non-oldest requests)."""
+        need = self.kv.pages_needed(rows_after) - len(run.pages)
+        while need > self.kv.free_pages:
+            if not self._preempt_youngest(older_than=run.ticket):
+                return False              # run is the youngest: it waits
+        for _ in range(need):
+            run.pages.append(self.kv.alloc())
+        return True
+
+    def _admit(self) -> None:
+        while self.waiting and len(self.running) < self.lanes:
+            cand = self.waiting[0]
+            # Admission is against the pool budget for the tokens the
+            # request *has* (prompt ⊕ replayed generation) plus one decode
+            # row; further growth allocates lazily and may preempt.
+            if self.kv.pages_needed(cand.known() + 1) > self.kv.free_pages:
+                break                     # FCFS: the head blocks the queue
+            self.waiting.pop(0)
+            cand.rows = 0
+            cand.req.state = RequestState.PREFILL
+            bisect.insort(self.running, cand, key=lambda r: r.ticket)
+
+    # ---------------------------------------------------------------- plan
+    def schedule(self) -> Tuple[List[LanePlan], Tuple[int, ...]]:
+        """→ (lane plans for this step, uids preempted while planning).
+
+        The token budget is spent decode-lanes-first (fairness); pages are
+        then granted in strict ticket order (who may evict whom is
+        seniority), and only for tokens that actually got budget — a
+        budget-starved lane never evicts a resident for rows it will not
+        write this step.  A lane that gets no budget or loses its pages
+        simply does not appear in the plan.
+        """
+        self._evicted_now = []
+        self._admit()
+        budget = self.step_tokens
+        wants = {}                                    # ticket → q_len
+        for run in sorted(self.running,
+                          key=lambda r: (r.remaining() > 1, r.ticket)):
+            q = min(self.chunk_size, run.remaining(), budget)
+            if q <= 0:
+                continue
+            budget -= q
+            wants[run.ticket] = q
+        plans: List[LanePlan] = []
+        for run in list(sorted(self.running, key=lambda r: r.ticket)):
+            if run not in self.running:
+                continue                              # evicted by an elder
+            q = wants.get(run.ticket)
+            if q is None or not self._grant_pages(run, run.rows + q):
+                continue
+            run.req.state = (RequestState.DECODE if run.remaining() == 1
+                             else RequestState.PREFILL)
+            plans.append(LanePlan(run, q))
+        return plans, tuple(self._evicted_now)

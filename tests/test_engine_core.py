@@ -1,0 +1,312 @@
+"""EngineCore + Scheduler: the request-level serving API.
+
+Covers the redesign's contracts: mixed chunked-prefill + decode batches are
+token-identical to the PR-2 engines (float and int8); a stream of distinct
+prompt lengths compiles O(1) step functions (chunking makes shapes static);
+preemption-by-eviction resumes token-identically; chunked paged prefill
+matches the contiguous prefill oracle over ragged lengths, chunk sizes
+{1, ps, 3·ps}, GQA and int8 pools; token-budget fairness keeps decode lanes
+ahead of prefill bursts; sliding-window configs page when page_size ≤
+window."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (EngineCore, Request, RequestState, ServingEngine,
+                           StepOutput)
+
+
+def build(name="deepseek-7b-smoke", **replace):
+    cfg = get_config(name)
+    if replace:
+        cfg = cfg.replace(**replace)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def prompts_for(cfg, seed, lens):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, lp).astype(np.int32)
+            for lp in lens]
+
+
+def by_uid(done):
+    return {r.uid: r.tokens for r in done}
+
+
+# --------------------------------------------------- mixed-batch identity --
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+def test_step_token_identical_to_pr2_engines(kv_quant):
+    """EngineCore.step() with mixed chunked-prefill + decode lanes emits the
+    same greedy token streams as the slot-contiguous engine on the same
+    request trace (lowest-index tie-break), float and int8.  Prompt lengths
+    straddle chunk and page boundaries so early requests are decoding while
+    later ones still stream prefill chunks — the mixed batch is exercised,
+    not just reachable."""
+    cfg, params = build(kv_quant=kv_quant)
+    lens = (3, 21, 9, 14, 6)
+    news = (7, 5, 9, 4, 6)
+
+    def submit_all(eng):
+        for i, p in enumerate(prompts_for(cfg, 13, lens)):
+            eng.submit(Request(uid=i, prompt=p, max_new=news[i]))
+
+    slot = ServingEngine(cfg, params, slots=3, max_len=64)
+    submit_all(slot)
+    want = by_uid(slot.run())
+
+    core = EngineCore(cfg, params, lanes=3, page_size=8, num_pages=24,
+                      chunk_size=8)
+    submit_all(core)
+    outs = []
+    while core.scheduler.has_work():
+        outs.append(core.step())
+    assert by_uid(core.finished) == want
+    assert any(o.mixed for o in outs), "no step mixed prefill with decode"
+
+
+# ------------------------------------------------------- compile counting --
+
+def test_distinct_prompt_lengths_compile_O1_step_functions():
+    """The recompile fallout of the per-prompt-length b=1 prefill is gone:
+    chunking makes every step shape static, so step functions are keyed
+    only by (chunk width ∈ {1, C}) × (power-of-two table width) — never by
+    prompt length.  Lengths 3/12/21 deterministically cover all six combos
+    for this pool; a second stream of seven *new* distinct lengths then
+    traces nothing at all (the PR-2 engines compiled one prefill per
+    length)."""
+    cfg, params = build()
+    eng = EngineCore(cfg, params, lanes=1, page_size=8, num_pages=64,
+                     chunk_size=8)
+
+    def serve(lens, seed):
+        for i, p in enumerate(prompts_for(cfg, seed, lens)):
+            eng.submit(Request(uid=seed * 100 + i, prompt=p, max_new=2))
+        eng.run()
+        eng.finished.clear()
+
+    serve((3, 12, 21), seed=1)
+    traced = eng.trace_count
+    assert traced <= 6          # widths {1, C} × table buckets {1, 2, 4}
+    serve((4, 7, 11, 13, 17, 19, 20), seed=2)   # 7 new distinct lengths
+    assert eng.trace_count == traced, (
+        f"new prompt lengths retraced the step: {traced} → "
+        f"{eng.trace_count}")
+
+
+# ------------------------------------------------------------ preemption --
+
+def test_preempted_request_resumes_token_identical():
+    """Fill the pool with a long-running request, admit a longer prompt;
+    the pool exhausts mid-flight, the youngest resident is evicted
+    (recompute preemption) and later resumes — and every request's token
+    stream is identical to an uncontended (solo, full-pool) run."""
+    cfg, params = build()
+    specs = [(4, 26), (12, 14)]            # (prompt_len, max_new)
+    prompts = prompts_for(cfg, 21, [lp for lp, _ in specs])
+
+    solo = {}
+    for uid, (lp, mn) in enumerate(specs):
+        eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=16,
+                         chunk_size=4)
+        eng.submit(Request(uid=uid, prompt=prompts[uid], max_new=mn))
+        solo[uid] = eng.run()[0].tokens
+
+    # contended: 8 pages cannot hold both peaks (8 + 7 pages)
+    eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=8,
+                     chunk_size=4)
+    preempted_seen = []
+    for uid, (lp, mn) in enumerate(specs):
+        eng.submit(Request(uid=uid, prompt=prompts[uid], max_new=mn))
+    while eng.scheduler.has_work():
+        out = eng.step()
+        preempted_seen.extend(out.preempted)
+    assert preempted_seen, "pool contention never triggered an eviction"
+    got = by_uid(eng.finished)
+    assert got == solo, "preempted request did not resume token-identically"
+    assert eng.pages_in_use == 0
+    # the evicted request went through the PREEMPTED state and finished
+    evicted = eng.finished[-1] if eng.finished[-1].uid in preempted_seen \
+        else eng.finished[0]
+    assert evicted.state is RequestState.FINISHED
+
+
+def test_oldest_resident_is_never_evicted():
+    """Eviction picks strictly younger residents, so the oldest request
+    always runs to completion — the progress guarantee behind
+    preemption-by-eviction."""
+    cfg, params = build()
+    eng = EngineCore(cfg, params, lanes=3, page_size=4, num_pages=8,
+                     chunk_size=4)
+    for i, p in enumerate(prompts_for(cfg, 3, (6, 6, 6))):
+        eng.submit(Request(uid=i, prompt=p, max_new=20))
+    first_done = None
+    while eng.scheduler.has_work():
+        out = eng.step()
+        assert 0 not in out.preempted, "oldest request was evicted"
+        if first_done is None and out.finished:
+            first_done = out.finished[0]
+    assert first_done == 0      # FCFS: the oldest finishes first here
+
+
+# ------------------------------------------- chunked-prefill equivalence --
+
+def _drive_chunked_prefill(model, params, core, prompts, chunk):
+    """Manually stream ragged prompts through the unified chunk step (the
+    exact EngineCore dataflow) and return each lane's final-row logits."""
+    kv = core.kv
+    lanes = len(prompts)
+    pages = [[] for _ in prompts]
+    rows = [0] * lanes
+    final = [None] * lanes
+    while any(rows[i] < len(prompts[i]) for i in range(lanes)):
+        q_len = np.zeros((lanes,), np.int32)
+        kv_len = np.zeros((lanes,), np.int32)
+        toks = np.zeros((lanes, chunk), np.int32)
+        for i, p in enumerate(prompts):
+            c = min(chunk, len(p) - rows[i])
+            if c <= 0:
+                continue
+            while len(pages[i]) < kv.pages_needed(rows[i] + c):
+                pages[i].append(kv.alloc())
+            toks[i, chunk - c:] = p[rows[i]:rows[i] + c]
+            q_len[i] = c
+            kv_len[i] = rows[i] + c
+            rows[i] += c
+        width = 1 << max(max(len(pg) for pg in pages) - 1, 0).bit_length()
+        tbl = np.full((lanes, width), kv.scratch, np.int32)
+        for i, pg in enumerate(pages):
+            tbl[i, :len(pg)] = pg
+        logits, kv.pool = core._step(
+            core.params, kv.pool, jnp.asarray(tbl), jnp.asarray(toks),
+            jnp.asarray(kv_len), jnp.asarray(q_len))
+        for i in range(lanes):
+            if q_len[i] and rows[i] == len(prompts[i]):
+                final[i] = np.asarray(logits[i])
+    return final
+
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+@pytest.mark.parametrize("chunk_factor", ["1", "ps", "3ps"])
+def test_chunked_prefill_matches_contiguous_oracle(chunk_factor, kv_quant):
+    """Chunked paged prefill == the contiguous ``prefill`` oracle on the
+    final-position logits, over ragged prompt lengths, chunk sizes
+    {1, ps, 3·ps}, GQA heads (the smoke config is 4 query / 2 KV) and int8
+    pools.  Greedy argmax must agree exactly; logits to float tolerance."""
+    cfg, params = build(kv_quant=kv_quant)
+    ps = 8
+    chunk = {"1": 1, "ps": ps, "3ps": 3 * ps}[chunk_factor]
+    m = build_model(cfg)
+    lens = (19, 7, 25)                       # ragged, page-straddling
+    prompts = prompts_for(cfg, 5, lens)
+
+    core = EngineCore(cfg, params, lanes=len(prompts), page_size=ps,
+                      num_pages=16, chunk_size=chunk)
+    got = _drive_chunked_prefill(m, params, core, prompts, chunk)
+
+    for i, p in enumerate(prompts):
+        caches = m.init_cache(1, len(p))
+        want, _ = m.prefill(params, {"tokens": jnp.asarray(p)[None]}, caches)
+        want = np.asarray(want[0])
+        np.testing.assert_allclose(got[i], want, atol=2e-4, rtol=2e-4,
+                                   err_msg=f"lane {i} (len {len(p)})")
+        assert int(np.argmax(got[i])) == int(np.argmax(want))
+
+
+# ------------------------------------------------------------- fairness --
+
+def test_token_budget_keeps_decode_ahead_of_prefill():
+    """With a step token budget, resident decode lanes always get their one
+    token before prefill chunks spend the rest — a long prompt streams
+    through spare capacity instead of starving decodes."""
+    cfg, params = build()
+    eng = EngineCore(cfg, params, lanes=2, page_size=8, num_pages=16,
+                     chunk_size=8, step_tokens=5)
+    eng.submit(Request(uid=0, prompt=prompts_for(cfg, 1, (4,))[0],
+                       max_new=12))
+    eng.step()                              # uid 0 resident, decoding
+    eng.submit(Request(uid=1, prompt=prompts_for(cfg, 2, (30,))[0],
+                       max_new=2))
+    saw_budgeted_mix = False
+    while eng.scheduler.has_work():
+        out = eng.step()
+        assert out.prefill_tokens + out.decode_tokens <= 5
+        if out.mixed:
+            assert out.decode_tokens >= 1
+            assert out.prefill_tokens <= 4  # budget minus the decode lane
+            saw_budgeted_mix = True
+    assert saw_budgeted_mix
+    assert len(by_uid(eng.finished)[0]) == 12
+
+
+# ------------------------------------------------- sliding-window paging --
+
+@pytest.mark.parametrize("page_size", [4, 8])
+def test_sliding_window_config_pages_when_window_fits(page_size):
+    """gemma2-style local+global stacks serve through EngineCore when
+    page_size ≤ window (no ring buffer materialises inside a page — the
+    pageability probe must not look past page_size, so the window == page
+    boundary works too) and stay token-identical to the slot engine,
+    window masking included."""
+    cfg, params = build("gemma2-9b-smoke")
+    assert cfg.window == 8
+
+    def submit_all(eng):
+        for i, p in enumerate(prompts_for(cfg, 5, (4, 14, 9))):
+            eng.submit(Request(uid=i, prompt=p, max_new=(6, 4, 8)[i]))
+
+    slot = ServingEngine(cfg, params, slots=2, max_len=64)
+    submit_all(slot)
+    want = by_uid(slot.run())
+    core = EngineCore(cfg, params, lanes=2, page_size=page_size,
+                      num_pages=96 // page_size, chunk_size=8)
+    submit_all(core)
+    assert by_uid(core.run()) == want
+
+
+# ------------------------------------------------------------ rejection --
+
+def test_empty_prompt_rejected_at_submit():
+    """A zero-token prompt can never be scheduled (known() == 0 plans
+    q_len = 0 forever) — it must be rejected at submit, not wedge a lane."""
+    cfg, params = build()
+    eng = EngineCore(cfg, params, lanes=1, page_size=8, num_pages=8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(uid=0, prompt=np.array([], np.int32), max_new=4))
+    assert not eng.scheduler.has_work()
+
+
+# ------------------------------------------------------------ StepOutput --
+
+def test_step_output_accounting():
+    """StepOutput's lane/token accounting adds up against the request
+    bookkeeping."""
+    cfg, params = build()
+    eng = EngineCore(cfg, params, lanes=2, page_size=8, num_pages=16,
+                     chunk_size=8)
+    eng.submit(Request(uid=0, prompt=prompts_for(cfg, 9, (11,))[0],
+                       max_new=3))
+    out = eng.step()
+    assert isinstance(out, StepOutput)
+    assert out.lanes == 1 and out.prefill_tokens == 8  # first chunk of 11
+    assert out.tokens == {} and not out.finished
+    out = eng.step()                        # final 3 prompt rows → sample
+    assert out.prefill_tokens == 3 and len(out.tokens) == 1
+    eng.run()
+    assert len(eng.finished[0].tokens) == 3
+
+    # Phase accounting is by remaining-known, not q_len: a chunk_size=1
+    # engine still reports its prompt streaming as prefill tokens.
+    eng1 = EngineCore(cfg, params, lanes=1, page_size=8, num_pages=16,
+                      chunk_size=1)
+    eng1.submit(Request(uid=0, prompt=prompts_for(cfg, 9, (5,))[0],
+                        max_new=2))
+    outs = []
+    while eng1.scheduler.has_work():
+        outs.append(eng1.step())
+    assert sum(o.prefill_tokens for o in outs) == 4   # rows 0..3 of 5
+    assert sum(o.decode_tokens for o in outs) == 2    # the 2 sampling steps

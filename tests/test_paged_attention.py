@@ -154,6 +154,100 @@ def test_paged_via_attention_api(rng):
                                atol=0, rtol=0)
 
 
+# ------------------------------------------------------- chunked prefill --
+
+def chunk_oracle(backend, q, kg, vg, lens, **kw):
+    """Per-lane contiguous-backend attention for a query *chunk* whose rows
+    end at each lane's live length (q_offset = len - Lq)."""
+    lq = q.shape[2]
+    outs = []
+    for i in range(q.shape[0]):
+        li = int(lens[i])
+        outs.append(attention(q[i:i + 1], kg[i:i + 1], vg[i:i + 1],
+                              backend=backend, causal=True,
+                              q_offset=li - lq, kv_len=li, exp_mode="lut",
+                              **kw))
+    return np.concatenate([np.asarray(o) for o in outs], axis=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3),              # GQA group size
+       st.integers(1, 6),              # chunk length Lq
+       st.sampled_from([4, 8]),        # page size
+       st.integers(0, 10_000))         # seed
+def test_chunked_prefill_matches_contiguous_backends(group, lq, ps, seed):
+    """Multi-row paged queries (the chunked-prefill path) == naive/jnp on
+    the gathered view with the same causal intra-chunk mask, over shuffled
+    tables, ragged per-lane lengths and GQA packings."""
+    rng = np.random.default_rng(seed)
+    b, hkv, d, p = 2, 2, 16, 4
+    hq = hkv * group
+    n = p * b + 1
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q = jnp.asarray(rng.normal(size=(b, hq, lq, d)).astype(np.float32))
+    tbl = shuffled_tables(rng, b, p, n)
+    lens = jnp.asarray(rng.integers(lq, p * ps + 1, size=b), jnp.int32)
+
+    got = np.asarray(paged_attention_reference(q, kp, vp, tbl, lens,
+                                               exp_mode="lut"))
+    kg, vg = gather_view(kp, tbl), gather_view(vp, tbl)
+    for backend in ("naive", "jnp"):
+        want = chunk_oracle(backend, q, kg, vg, lens)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4,
+                                   err_msg=backend)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 5), st.integers(0, 10_000))
+def test_chunked_kernel_interpret_matches_reference(group, lq, seed):
+    """The Pallas kernel (interpret mode) == the jnp reference for
+    multi-row chunks — the per-row causal bound lives in both."""
+    rng = np.random.default_rng(seed)
+    b, hkv, d, ps, p = 2, 2, 16, 8, 3
+    n = p * b + 2
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q = jnp.asarray(rng.normal(size=(b, hkv * group, lq, d))
+                    .astype(np.float32))
+    tbl = shuffled_tables(rng, b, p, n)
+    lens = jnp.asarray(rng.integers(lq, p * ps + 1, size=b), jnp.int32)
+
+    ref = paged_attention_reference(q, kp, vp, tbl, lens, exp_mode="lut")
+    ker = paged_attention(q, kp, vp, tbl, lens, exp_mode="lut",
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_chunked_window_and_int8(rng):
+    """Sliding window masks per query row, and int8 pools track float —
+    on the chunked path specifically."""
+    b, hq, hkv, d, ps, p, lq = 2, 4, 2, 32, 8, 4, 5
+    n = p * b + 1
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q = jnp.asarray(rng.normal(size=(b, hq, lq, d)).astype(np.float32))
+    tbl = shuffled_tables(rng, b, p, n)
+    lens = jnp.asarray([13, 29], jnp.int32)
+
+    got = np.asarray(paged_attention_reference(q, kp, vp, tbl, lens,
+                                               window=7, cap=15.0))
+    want = chunk_oracle("naive", q, gather_view(kp, tbl),
+                        gather_view(vp, tbl), lens, window=7, cap=15.0)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+    def quant(pool):
+        qv, s = quantize_kv_rows(pool.reshape(1, n * hkv, ps, d))
+        return qv.reshape(n, hkv, ps, d), s.reshape(n, hkv, ps)
+
+    kq, ks = quant(kp)
+    vq, vs = quant(vp)
+    base = np.asarray(paged_attention_reference(q, kp, vp, tbl, lens))
+    for impl in (paged_attention_reference,
+                 lambda *a, **kw: paged_attention(*a, **kw, interpret=True)):
+        got = np.asarray(impl(q, kq, vq, tbl, lens, k_scale=ks, v_scale=vs))
+        rel = np.linalg.norm(got - base) / np.linalg.norm(base)
+        assert rel < 0.02, rel
+
+
 # --------------------------------------------------------------- registry --
 
 def _call(**kw):
@@ -166,13 +260,12 @@ def _call(**kw):
 
 def test_resolution_paged_calls_only_reach_paged():
     assert resolve_backend("auto", _call()).name == "paged"
+    # chunked prefill (multi-row queries with a page table) resolves too
+    assert resolve_backend("auto", _call(lq=4)).name == "paged"
     # contiguous backends refuse pool+page-table calls even explicitly
     for name in ("naive", "naive_decode", "jnp", "pallas"):
         with pytest.raises(ValueError, match="does not support"):
             resolve_backend(name, _call())
-    # and the paged kernel refuses multi-row (prefill) queries
-    with pytest.raises(ValueError, match="no registered attention backend"):
-        resolve_backend("auto", _call(lq=4))
 
 
 def test_resolution_contiguous_calls_never_pick_paged():

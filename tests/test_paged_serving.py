@@ -1,6 +1,10 @@
-"""Paged-KV serving engine: equivalence with the contiguous engine, page
-lifecycle (free list, reuse after release), unsupported-layout rejection,
-and the in-place decode guarantee (no gathered cache view in the graph)."""
+"""Paged serving (EngineCore + the deprecated PagedServingEngine shim):
+equivalence with the contiguous engine, page lifecycle (free list, reuse
+after release, pool-capped traffic), structured unsupported-layout
+rejection, and the in-place decode guarantee (no gathered cache view in
+the step graph)."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +12,11 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import PagedServingEngine, Request, ServingEngine
+from repro.serving import (EngineCore, PagedServingEngine, Request,
+                           ServingEngine, UnsupportedCacheLayout)
+
+warnings.filterwarnings("ignore", category=DeprecationWarning,
+                        module="repro.serving.engine")
 
 
 def build(name="deepseek-7b-smoke", **replace):
@@ -34,8 +42,10 @@ def by_uid(done):
 # ------------------------------------------------------------ equivalence --
 
 def test_paged_matches_contiguous_greedy():
-    """Greedy decode through the paged engine must be token-identical to the
-    slot-contiguous engine — paging is a memory layout, not a model change."""
+    """Greedy decode through the paged path (chunked prefill + in-place
+    decode) must be token-identical to the slot-contiguous engine — paging
+    and chunking are a memory layout, not a model change.  Also proves the
+    deprecated PagedServingEngine shim still answers like an engine."""
     cfg, params = build()
     out = {}
     for make in [
@@ -51,7 +61,8 @@ def test_paged_matches_contiguous_greedy():
 
 
 def test_paged_matches_contiguous_quantized_cache():
-    """INT8 KV caches page too (values + per-row scales share page tables)."""
+    """INT8 KV caches page too (values + per-row scales share page tables),
+    chunked prefill included."""
     cfg, params = build(kv_quant=True)
     outs = []
     for make in [
@@ -67,7 +78,8 @@ def test_paged_matches_contiguous_quantized_cache():
 
 
 def test_prompt_crossing_page_boundaries():
-    """Prompts longer than one page prefill into multiple pages correctly."""
+    """Prompts longer than one page (and one chunk) prefill into multiple
+    pages correctly — the chunk stream writes pages in place as it goes."""
     cfg, params = build()
     rng = np.random.default_rng(1)
     prompt = rng.integers(0, cfg.vocab_size, 21).astype(np.int32)  # 3 pages
@@ -76,9 +88,10 @@ def test_prompt_crossing_page_boundaries():
     eng.submit(Request(uid=0, prompt=prompt.copy(), max_new=6))
     want = eng.run()[0].tokens
 
-    peng = PagedServingEngine(cfg, params, slots=1, page_size=8, num_pages=8)
-    peng.submit(Request(uid=0, prompt=prompt.copy(), max_new=6))
-    assert peng.run()[0].tokens == want
+    core = EngineCore(cfg, params, lanes=1, page_size=8, num_pages=8,
+                      chunk_size=8)
+    core.submit(Request(uid=0, prompt=prompt.copy(), max_new=6))
+    assert core.run()[0].tokens == want
 
 
 # ---------------------------------------------------------- page lifecycle --
@@ -87,7 +100,8 @@ def test_pages_released_and_reused():
     """All pages return to the free list after a wave drains, and a second
     wave reusing those physical pages decodes identically."""
     cfg, params = build()
-    eng = PagedServingEngine(cfg, params, slots=2, page_size=8, num_pages=12)
+    eng = EngineCore(cfg, params, lanes=2, page_size=8, num_pages=12,
+                     chunk_size=8)
 
     def wave():
         for r in mixed_requests(cfg, np.random.default_rng(7)):
@@ -98,39 +112,43 @@ def test_pages_released_and_reused():
 
     first = wave()
     assert eng.pages_in_use == 0
-    assert eng.kv.reserved == 0
     assert sorted(eng.kv.free) == list(range(12))
     second = wave()                     # same traffic over recycled pages
     assert second == first
     assert eng.pages_in_use == 0
 
 
-def test_admission_waits_for_free_pages():
-    """A pool too small for all requests at once still drains (FIFO waits
-    for reservations to free) and never double-allocates a page."""
+def test_pool_capped_traffic_drains():
+    """A pool too small for all requests at once still drains — admission
+    blocks on the budget, growth preempts-by-eviction — and no physical
+    page is ever double-booked."""
     cfg, params = build()
-    # each request reserves ceil((7+8)/8) = 2 pages; pool of 4 → 2 resident
-    eng = PagedServingEngine(cfg, params, slots=4, page_size=8, num_pages=4)
+    # each request peaks at ceil((7+8)/8) = 2 pages; a pool of 4 can hold
+    # two grown requests — the other three wait or get evicted and resume
+    eng = EngineCore(cfg, params, lanes=4, page_size=8, num_pages=4,
+                     chunk_size=8)
     for i in range(5):
         eng.submit(Request(uid=i, prompt=np.arange(7, dtype=np.int32) + i,
                            max_new=8))
-    seen_overlap = []
-    while eng.queue or any(a is not None for a in eng.active):
+    while eng.scheduler.has_work():
         eng.step()
         live_pages = [p for t in eng.page_tables for p in t]
         assert len(live_pages) == len(set(live_pages)), "page double-booked"
-        seen_overlap.append(sum(a is not None for a in eng.active))
+        assert eng.pages_in_use <= 4
     assert len(eng.finished) == 5
-    assert max(seen_overlap) <= 2       # pool capped concurrency, not slots
+    assert all(len(r.tokens) == 8 for r in eng.finished)
     assert eng.pages_in_use == 0
 
 
 def test_lazy_page_growth():
-    """Decode allocates pages only as the sequence crosses page boundaries."""
+    """Pages are allocated only as the token stream crosses page
+    boundaries — a 6-token prompt starts on one page; the second page
+    appears only once decode reaches row 8."""
     cfg, params = build()
-    eng = PagedServingEngine(cfg, params, slots=1, page_size=8, num_pages=8)
+    eng = EngineCore(cfg, params, lanes=1, page_size=8, num_pages=8,
+                     chunk_size=8)
     eng.submit(Request(uid=0, prompt=np.arange(6, dtype=np.int32),
-                       max_new=12))   # reserves ceil(18/8)=3, starts with 1
+                       max_new=12))
     eng.step()
     assert len(eng.page_tables[0]) == 1          # 6-token prompt: one page
     for _ in range(4):
@@ -140,7 +158,7 @@ def test_lazy_page_growth():
     assert eng.pages_in_use == 0
 
 
-# ------------------------------------------------------- in-place decode --
+# ------------------------------------------------------- in-place serving --
 
 def _jaxpr_shapes(jaxpr):
     """Every intermediate array shape in a jaxpr, nested subjaxprs included
@@ -163,6 +181,16 @@ def _jaxpr_shapes(jaxpr):
                 yield from _jaxpr_shapes(j)
 
 
+def _step_jaxpr(eng, *, width, c, kv_len, q_len, npages):
+    """Trace the engine's unified step at a given (chunk, table-width)."""
+    tbl = np.full((eng.lanes, width), eng.kv.scratch, np.int32)
+    tbl[0, :npages] = np.arange(npages, dtype=np.int32)
+    return jax.make_jaxpr(eng._step)(
+        eng.params, eng.kv.pool, jnp.asarray(tbl),
+        jnp.zeros((eng.lanes, c), jnp.int32),
+        jnp.asarray(kv_len, jnp.int32), jnp.asarray(q_len, jnp.int32))
+
+
 @pytest.mark.parametrize("kv_quant", [False, True])
 def test_decode_graph_has_no_gathered_view(kv_quant):
     """The paged decode step must never materialise the contiguous
@@ -173,40 +201,62 @@ def test_decode_graph_has_no_gathered_view(kv_quant):
     so a hit can only be the gathered copy."""
     cfg, params = build(kv_quant=kv_quant)
     ps, width = 12, 16
-    eng = PagedServingEngine(cfg, params, slots=2, page_size=ps,
-                             num_pages=32)
-    # a 150-row prompt owns 13 pages; the engine pads tables to width 16
-    eng.submit(Request(uid=0,
-                       prompt=(np.arange(150, dtype=np.int32)
-                               % cfg.vocab_size),
-                       max_new=4))
-    eng.step()
-    npages = len(eng.page_tables[0])
-    assert npages == 13 and (1 << (npages - 1).bit_length()) == width
-    tbl = np.full((2, width), eng.kv.scratch, np.int32)
-    tbl[0, :npages] = eng.page_tables[0]
+    eng = EngineCore(cfg, params, lanes=2, page_size=ps, num_pages=32,
+                     chunk_size=24)
     gathered_len = width * ps                              # 192
 
-    jaxpr = jax.make_jaxpr(eng._decode)(
-        params, eng.kv.pool, jnp.asarray(tbl),
-        jnp.zeros((2,), jnp.int32), jnp.asarray([150, 0], jnp.int32))
+    jaxpr = _step_jaxpr(eng, width=width, c=1, kv_len=[151, 0],
+                        q_len=[1, 0], npages=13)
     bad = [s for s in _jaxpr_shapes(jaxpr.jaxpr) if gathered_len in s]
     assert not bad, f"gathered cache view in decode graph: {bad}"
 
     # sanity: the detector does catch the legacy gather copy
+    tbl = np.full((2, width), eng.kv.scratch, np.int32)
     legacy = jax.make_jaxpr(
         lambda pool: eng.kv.gather(pool, jnp.asarray(tbl)))(eng.kv.pool)
     assert any(gathered_len in s for s in _jaxpr_shapes(legacy.jaxpr))
 
 
+@pytest.mark.parametrize("kv_quant", [False, True])
+def test_chunked_prefill_graph_has_no_contiguous_cache(kv_quant):
+    """Chunked prefill is in-place too: the traced chunk step contains no
+    contiguous (B, n·page_size, …) KV intermediate — neither the padded
+    table view (16·12 = 192) nor the old contiguous-prefill buffer that
+    ``write_prefill`` used to scatter (13 pages · 12 = 156 rows for this
+    prompt).  The contiguous-then-scatter path is structurally gone."""
+    cfg, params = build(kv_quant=kv_quant)
+    ps, width, chunk = 12, 16, 24
+    eng = EngineCore(cfg, params, lanes=2, page_size=ps, num_pages=32,
+                     chunk_size=chunk)
+    # mid-prefill of a 150-token prompt: 120 rows resident, chunk 24 live
+    jaxpr = _step_jaxpr(eng, width=width, c=chunk, kv_len=[120, 0],
+                        q_len=[chunk, 0], npages=10)
+    contiguous = {width * ps, 13 * ps, 150}
+    bad = [s for s in _jaxpr_shapes(jaxpr.jaxpr)
+           if contiguous.intersection(s)]
+    assert not bad, f"contiguous KV intermediate in chunk graph: {bad}"
+    # and write_prefill itself is gone from the pool API
+    from repro.serving.paged import PagedKVCache
+    assert not hasattr(PagedKVCache, "write_prefill")
+
+
 # ------------------------------------------------------------- rejection --
 
-@pytest.mark.parametrize("name,page_size", [
-    ("gemma2-9b-smoke", 16),        # ring-buffer sliding-window local caches
-    ("falcon-mamba-7b-smoke", 16),  # SSM state: no length axis to page
+@pytest.mark.parametrize("name,page_size,layout", [
+    ("gemma2-9b-smoke", 16, "ring_buffer_sliding_window"),
+    ("falcon-mamba-7b-smoke", 16, "ssm_state"),
 ])
-def test_unpageable_layouts_rejected(name, page_size):
+def test_unpageable_layouts_rejected(name, page_size, layout):
+    """Unpageable cache layouts raise a structured UnsupportedCacheLayout
+    naming the offending layout (not a silent/shape-soup ValueError).
+    gemma2 is only unpageable when page_size > window (a ring buffer would
+    appear inside one page) — at page_size ≤ window its local layers keep
+    full per-page caches and serve fine (see test_engine_core)."""
     cfg, params = build(name)
-    with pytest.raises(ValueError, match="paged KV cache"):
-        PagedServingEngine(cfg, params, slots=2, page_size=page_size,
-                           num_pages=8)
+    with pytest.raises(UnsupportedCacheLayout, match="paged KV cache"
+                       ) as ei:
+        EngineCore(cfg, params, lanes=2, page_size=page_size, num_pages=8)
+    assert ei.value.layout == layout
+    assert layout in str(ei.value)
+    # still a ValueError, so pre-redesign handlers keep working
+    assert isinstance(ei.value, ValueError)
