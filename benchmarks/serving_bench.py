@@ -5,13 +5,17 @@ machine-readable ``BENCH_serving.json`` so the perf trajectory is tracked
 across PRs:
 
 1. **Engine throughput** — slot-contiguous vs the request-level
-   ``EngineCore`` (paged KV + chunked prefill) at the SAME resident-KV
-   budget under mixed traffic (a couple of long prompts among many short
-   ones).  The slot engine sizes every lane for the longest request; the
-   paged engine spends rows page-by-page, so the same budget sustains more
-   concurrent lanes.  Per-step decode latency (p50/p95), peak resident
-   cache rows and mixed chunked-prefill+decode step counts are recorded;
-   each arm carries its ``prefill_mode`` ("contiguous" / "chunked").
+   ``EngineCore`` in BOTH packings (the PR-3 padded ``(lanes, C)`` block
+   and the token-level ragged stream) at the SAME resident-KV budget under
+   mixed traffic (a couple of long prompts among many short ones).  The
+   slot engine sizes every lane for the longest request; the paged engines
+   spend rows page-by-page, so the same budget sustains more concurrent
+   lanes — and the ragged arm additionally never pays the mixed-batch
+   padding tax (a decode lane costs 1 token-row, not a chunk-wide one).
+   Per-step decode latency (p50/p95), peak resident cache rows, mixed
+   chunked-prefill+decode step counts and ``padding_efficiency`` (live
+   token rows / computed token rows) are recorded; each arm carries its
+   ``prefill_mode`` ("contiguous" / "chunked") and ``packing``.
 
 2. **Step breakdown** — the PR-1 gather path vs the in-place paged path at
    equal row budget, one attention layer, same pool/table/occupancy:
@@ -117,6 +121,7 @@ def _instrumented_drain(engine, requests, rows_in_use,
     lat: List[float] = []
     peak_rows = 0
     steps = mixed_steps = prefill_toks = decode_toks = 0
+    live_rows = padded_rows = 0
 
     def busy():
         if core:
@@ -134,6 +139,8 @@ def _instrumented_drain(engine, requests, rows_in_use,
             mixed_steps += int(out.mixed)
             prefill_toks += out.prefill_tokens
             decode_toks += out.decode_tokens
+            live_rows += out.live_rows
+            padded_rows += out.padded_rows
         if steps > 10_000:
             raise RuntimeError("serving did not drain")
     dt = time.perf_counter() - t0
@@ -144,7 +151,9 @@ def _instrumented_drain(engine, requests, rows_in_use,
            "peak_cache_rows": int(peak_rows)}
     if core:
         res.update(mixed_steps=mixed_steps, prefill_tokens=prefill_toks,
-                   decode_tokens=decode_toks)
+                   decode_tokens=decode_toks,
+                   live_rows=live_rows, padded_rows=padded_rows,
+                   padding_efficiency=live_rows / max(padded_rows, 1))
     return res
 
 
@@ -168,23 +177,36 @@ def _engine_results(tiny: bool) -> Dict[str, Any]:
     # buckets), the last pass is the steady state a long-running server
     # actually sees.
     slot_eng = ServingEngine(cfg, params, slots=slot_lanes, max_len=max_len)
-    core_eng = EngineCore(cfg, params, lanes=paged_lanes, page_size=page,
-                          num_pages=num_pages, max_len=max_len,
-                          chunk_size=2 * page)
+    pad_eng = EngineCore(cfg, params, lanes=paged_lanes, page_size=page,
+                         num_pages=num_pages, max_len=max_len,
+                         chunk_size=2 * page, mode="padded")
+    rag_eng = EngineCore(cfg, params, lanes=paged_lanes, page_size=page,
+                         num_pages=num_pages, max_len=max_len,
+                         chunk_size=2 * page, mode="ragged")
     for _ in range(2 if tiny else 3):
         slot = _instrumented_drain(
             slot_eng, _mixed_requests(cfg.vocab_size, tiny),
             lambda e: e.slots * e.max_len)
-        paged = _instrumented_drain(
-            core_eng, _mixed_requests(cfg.vocab_size, tiny),
+        padded = _instrumented_drain(
+            pad_eng, _mixed_requests(cfg.vocab_size, tiny),
+            lambda e: e.pages_in_use * e.kv.page_size, core=True)
+        ragged = _instrumented_drain(
+            rag_eng, _mixed_requests(cfg.vocab_size, tiny),
             lambda e: e.pages_in_use * e.kv.page_size, core=True)
 
-    slot["lanes"], paged["lanes"] = slot_lanes, paged_lanes
-    slot["prefill_mode"], paged["prefill_mode"] = "contiguous", "chunked"
+    slot["lanes"] = slot_lanes
+    padded["lanes"] = ragged["lanes"] = paged_lanes
+    slot["prefill_mode"] = "contiguous"
+    padded["prefill_mode"] = ragged["prefill_mode"] = "chunked"
+    slot["packing"], padded["packing"] = "slots", "padded"
+    ragged["packing"] = "ragged"
     return {"budget_rows": budget_rows, "page_size": page,
             "num_pages": num_pages, "max_len": max_len,
-            "slot": slot, "paged": paged,
-            "speedup": paged["tok_s"] / slot["tok_s"]}
+            "token_buckets": list(rag_eng.scheduler.token_buckets),
+            "slot": slot, "padded": padded, "ragged": ragged,
+            "speedup": ragged["tok_s"] / slot["tok_s"],
+            "speedup_padded": padded["tok_s"] / slot["tok_s"],
+            "speedup_ragged_vs_padded": ragged["tok_s"] / padded["tok_s"]}
 
 
 # --------------------------------------------------------- step breakdown --
@@ -364,8 +386,14 @@ def _prefill_results(tiny: bool) -> Dict[str, Any]:
 
     ``distinct``: a stream of all-different prompt lengths — the scatter
     path re-jits its b=1 prefill for every length, the chunked path reuses
-    its two static step shapes.  ``warm``: the same length twice, keeping
-    only the second (steady-state compute, compile excluded).
+    its small static bucket set.  Both arms first serve a *warm-up* stream
+    of lengths disjoint from the measured ones: that covers the chunked
+    arm's one-time (bucket × table-width) compile keys — a bounded set a
+    long-running server crosses once — while leaving the scatter arm's
+    pathology untouched (its compiles are per *length*, and the warm-up
+    lengths are all different from the measured ones).  ``warm``: the same
+    length twice, keeping only the second (steady-state compute, compile
+    excluded).
     """
     from repro.configs import get_config
     from repro.models import build_model
@@ -379,15 +407,26 @@ def _prefill_results(tiny: bool) -> Dict[str, Any]:
     cfg = get_config("deepseek-7b-smoke")
     params = build_model(cfg).init(jax.random.PRNGKey(0))
     num_pages = -(-max(lens) // page) + 2     # equal budget for both arms
+    # One chunk shorter than each measured length (same final-chunk
+    # remainder — the ragged bucket key — never the same length) plus one
+    # near-max length that reaches the widest table bucket.  At bench
+    # scale this covers the chunked arm's compile keys exactly; at --tiny
+    # the short warm prompts cannot reach every (bucket × width) combo, so
+    # tiny distinct medians retain some compile cost (tiny CI is
+    # crash-only; cross-PR TTFT comparisons should use the full run).
+    warm_lens = sorted({w for w in
+                        [lp - chunk for lp in lens] + [max(lens) - 1]
+                        if w >= 1 and w not in set(lens)})
 
     arms = {}
     for mode, fn in (("scatter", lambda ls: _scatter_prefill_arm(
                           cfg, params, ls, num_pages, page)),
                      ("chunked", lambda ls: _chunked_prefill_arm(
                           cfg, params, ls, num_pages, page, chunk))):
-        distinct = fn(lens)
+        distinct = fn(warm_lens + lens)[len(warm_lens):]
         warm = min(fn([lens[0]] * 4)[1:])     # best-of-3 after compile
         arms[mode] = {"prefill_mode": mode,
+                      "warmup_lens": warm_lens,
                       "ttft_ms_distinct": distinct,
                       "ttft_ms_distinct_median": _pct(distinct, 50),
                       "ttft_ms_warm": warm}
@@ -423,20 +462,36 @@ def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
     yield ("serving/slot_contiguous_tok_s", e["slot"]["tok_s"],
            f"{e['slot']['tokens']} toks; {e['slot']['lanes']} lanes x "
            f"{e['max_len']} rows = budget")
-    yield ("serving/paged_tok_s", e["paged"]["tok_s"],
+    yield ("serving/padded_tok_s", e["padded"]["tok_s"],
            f"same budget as {e['num_pages']} x {e['page_size']}-row pages; "
-           f"{e['paged']['lanes']} lanes, chunked prefill")
-    yield ("serving/paged_speedup", e["speedup"],
-           "equal-memory mixed-length traffic; >1 means paging pays")
-    yield ("serving/paged_step_ms_p50", e["paged"]["step_ms_p50"],
-           "EngineCore step latency (chunked prefill + decode batches)")
-    yield ("serving/paged_peak_cache_rows", float(e["paged"]["peak_cache_rows"]),
+           f"{e['padded']['lanes']} lanes, padded (lanes, C) steps")
+    yield ("serving/ragged_tok_s", e["ragged"]["tok_s"],
+           f"same budget/lanes, token-level ragged steps "
+           f"(buckets {e['token_buckets']})")
+    yield ("serving/ragged_speedup", e["speedup"],
+           "ragged EngineCore vs slot engine, equal-memory mixed traffic")
+    yield ("serving/padded_speedup", e["speedup_padded"],
+           "PR-3 padded EngineCore vs slot engine (the padding-tax arm)")
+    yield ("serving/ragged_vs_padded_speedup", e["speedup_ragged_vs_padded"],
+           "the padding tax itself: same engine, ragged vs padded packing")
+    yield ("serving/padding_efficiency_ragged",
+           e["ragged"]["padding_efficiency"],
+           f"live rows / computed rows ({e['ragged']['live_rows']} / "
+           f"{e['ragged']['padded_rows']})")
+    yield ("serving/padding_efficiency_padded",
+           e["padded"]["padding_efficiency"],
+           f"live rows / computed rows ({e['padded']['live_rows']} / "
+           f"{e['padded']['padded_rows']})")
+    yield ("serving/ragged_step_ms_p50", e["ragged"]["step_ms_p50"],
+           "EngineCore ragged step latency (packed prefill+decode stream)")
+    yield ("serving/ragged_peak_cache_rows",
+           float(e["ragged"]["peak_cache_rows"]),
            f"resident rows at peak (slot engine: "
            f"{e['slot']['peak_cache_rows']} always)")
     yield ("serving/mixed_prefill_decode_steps",
-           float(e["paged"]["mixed_steps"]),
-           f"steps batching prefill chunks with decodes "
-           f"({e['paged']['prefill_tokens']} chunk toks streamed)")
+           float(e["ragged"]["mixed_steps"]),
+           f"ragged steps batching prefill chunks with decodes "
+           f"({e['ragged']['prefill_tokens']} chunk toks streamed)")
     yield ("serving/step_legacy_gather_ms", bd["legacy_gather_ms"],
            "the per-step copy the in-place kernel deleted")
     yield ("serving/step_attend_in_place_ms", bd["attend_in_place_ms"],

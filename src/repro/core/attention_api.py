@@ -48,6 +48,7 @@ class AttentionCall:
     has_kv_pos: bool              # ring-buffer position table supplied
     inside_shard_map: bool        # an axis_name was supplied
     has_page_table: bool = False  # k/v are page pools + a (B, P) page table
+    is_ragged: bool = False       # packed (1, Hq, T, D) stream + q_pos (T,)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,10 +63,11 @@ class BackendSpec:
 _REGISTRY: Dict[str, BackendSpec] = {}
 
 #: resolution order for ``backend="auto"`` — first auto-eligible backend wins.
-#: "paged" is the only backend that reads page pools, "ring" is only eligible
-#: inside shard_map, "naive" is the last resort.
-_AUTO_ORDER: Tuple[str, ...] = ("paged", "pallas", "naive_decode", "jnp",
-                                "ring", "naive")
+#: "paged_varlen"/"paged" are the only backends that read page pools (varlen
+#: for packed ragged streams, paged for (lanes, C) blocks), "ring" is only
+#: eligible inside shard_map, "naive" is the last resort.
+_AUTO_ORDER: Tuple[str, ...] = ("paged_varlen", "paged", "pallas",
+                                "naive_decode", "jnp", "ring", "naive")
 
 
 def register_backend(name: str, *, supports: Callable[[AttentionCall], bool],
@@ -126,7 +128,8 @@ def _is_static(x) -> bool:
 
 
 def describe_call(q, k, *, q_offset=0, kv_len=None, kv_pos=None,
-                  page_table=None, axis_name: Optional[str] = None,
+                  page_table=None, q_pos=None,
+                  axis_name: Optional[str] = None,
                   platform: Optional[str] = None) -> AttentionCall:
     return AttentionCall(
         lq=q.shape[2], lkv=k.shape[2],
@@ -134,7 +137,8 @@ def describe_call(q, k, *, q_offset=0, kv_len=None, kv_pos=None,
         static_lengths=_is_static(q_offset) and _is_static(kv_len),
         has_kv_pos=kv_pos is not None,
         inside_shard_map=axis_name is not None,
-        has_page_table=page_table is not None)
+        has_page_table=page_table is not None,
+        is_ragged=q_pos is not None)
 
 
 def resolve_backend(backend: str, call: AttentionCall, *,
@@ -174,6 +178,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               kv_len: Optional[jax.Array | int] = None,
               kv_pos: Optional[jax.Array] = None,
               page_table: Optional[jax.Array] = None,
+              q_pos: Optional[jax.Array] = None,
               axis_name: Optional[str] = None,
               fallback: bool = False) -> jax.Array:
     """The single attention entry point (see module docstring).
@@ -191,15 +196,24 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     positions ``kv_len - Lq + i`` with the causal intra-chunk mask implied).
     Only backends whose ``supports`` accepts pool+page-table callers (the
     "paged" kernel) resolve; contiguous backends never see the kwarg.
+
+    ``q_pos`` switches the paged convention to *ragged*: q is one packed
+    token stream ``(1, Hq, T, D)`` (lane segments abutting, no per-lane
+    padding), ``page_table`` holds *per-token* rows ``(T, P)`` and
+    ``q_pos`` (T,) is each token's absolute position — its causal bound.
+    Only the "paged_varlen" backend resolves ragged calls.
     """
     call = describe_call(q, k, q_offset=q_offset, kv_len=kv_len, kv_pos=kv_pos,
-                         page_table=page_table, axis_name=axis_name)
+                         page_table=page_table, q_pos=q_pos,
+                         axis_name=axis_name)
     spec = resolve_backend(backend, call, fallback=fallback)
     kw: Dict[str, Any] = dict(scale=scale, causal=causal, window=window,
                               cap=cap, block_k=block_k, exp_mode=exp_mode,
                               q_offset=q_offset, kv_len=kv_len, kv_pos=kv_pos)
     if page_table is not None:
         kw["page_table"] = page_table
+    if q_pos is not None:
+        kw["q_pos"] = q_pos
     if axis_name is not None:
         kw["axis_name"] = axis_name
     return spec.fn(q, k, v, **kw)
@@ -301,7 +315,7 @@ def _pallas(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
 
 @register_backend(
     "paged",
-    supports=lambda call: call.has_page_table
+    supports=lambda call: call.has_page_table and not call.is_ragged
     and not call.inside_shard_map and not call.has_kv_pos,
     doc="Paged attention: reads KV pages in place from the pool through the "
         "(B, P) page table — the Pallas kernel on TPU (scalar-prefetch "
@@ -324,6 +338,31 @@ def _paged(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
     from repro.kernels.paged_attention import paged_attention
     return paged_attention(q, k, v, page_table, kv_len, scale=scale, cap=cap,
                            window=window, exp_mode=exp_mode)
+
+
+@register_backend(
+    "paged_varlen",
+    supports=lambda call: call.has_page_table and call.is_ragged
+    and not call.inside_shard_map and not call.has_kv_pos,
+    doc="Ragged (varlen) paged attention: q is one packed (1, Hq, T, D) "
+        "token stream with per-token page-table rows (T, P) and per-token "
+        "causal bounds q_pos (T,) — the token-level serving step, no "
+        "(lanes, C) padding.  Same page-block machinery as 'paged' at "
+        "batch = T (kernels/paged_attention/varlen.py).")
+def _paged_varlen(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
+                  q_offset, kv_len, kv_pos, page_table, q_pos):
+    assert kv_pos is None, "ragged backend has no ring-buffer support"
+    assert causal, "ragged paged streams are causal by construction"
+    assert q.shape[0] == 1, \
+        f"ragged q is one packed (1, Hq, T, D) stream, got batch {q.shape[0]}"
+    # Positions live entirely in q_pos; kv_len/q_offset are the padded
+    # convention's fields and block_k a streaming-scan tile size.
+    del causal, q_offset, kv_len, block_k
+    from repro.kernels.paged_attention import paged_attention_varlen
+    qt = jnp.moveaxis(q[0], 1, 0)                       # (T, Hq, D)
+    out = paged_attention_varlen(qt, k, v, page_table, q_pos, scale=scale,
+                                 cap=cap, window=window, exp_mode=exp_mode)
+    return jnp.moveaxis(out, 0, 1)[None]                # (1, Hq, T, D)
 
 
 @register_backend(

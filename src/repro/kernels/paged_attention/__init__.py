@@ -1,4 +1,9 @@
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_reference
+from repro.kernels.paged_attention.varlen import (
+    paged_attention_varlen, paged_attention_varlen_reference,
+    varlen_positions)
 
-__all__ = ["paged_attention", "paged_attention_reference"]
+__all__ = ["paged_attention", "paged_attention_reference",
+           "paged_attention_varlen", "paged_attention_varlen_reference",
+           "varlen_positions"]

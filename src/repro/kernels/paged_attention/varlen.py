@@ -1,0 +1,126 @@
+"""Varlen (ragged) paged attention: one packed token stream, no lane padding.
+
+The serving step used to be a right-aligned ``(lanes, C)`` block — every
+decode lane paid ``C`` rows of padding whenever any lane prefilled.  The
+ragged step flattens the batch into one dense stream of ``T = Σ live
+tokens`` rows:
+
+    q            (T, Hq, D)     packed query rows, lane segments abutting
+    token_pages  (T, P)         each token's *own* page-table row (its
+                                lane's pages; dead/padding rows all-scratch)
+    q_pos        (T,)           each token's absolute position — which is
+                                also its causal bound: token t attends
+                                pool rows at positions ``0 .. q_pos[t]``
+    cu_seqlens   (S+1,)         optional lane boundaries (cumulative token
+                                counts); the kernel itself never needs them
+                                — causality and length live entirely in
+                                ``q_pos``/``token_pages`` — but callers use
+                                them to pack/unpack and tests to validate.
+
+The key identity: **varlen paged attention is paged decode at batch = T.**
+A packed token is exactly a one-row lane whose page table is its lane's row
+and whose live length is ``q_pos + 1`` — intra-chunk causality falls out
+because the chunk's KV rows are written to their pages *before* the attend
+(same order as the padded chunk step), and a token can never reach another
+lane's rows because its table row only names its own lane's pages.  So the
+same page-block online-softmax machinery (``ref.py`` off-TPU, the Pallas
+scalar-prefetch kernel on TPU, grid ``(token, kv_head, page_slot)``) serves
+both conventions; this module is the varlen entry point over it.
+
+INT8 pools and sliding windows thread straight through: per-row dequant
+scales ride the same per-token gather, and a window masks
+``q_pos - row < window`` per token.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_reference
+
+
+def varlen_positions(cu_seqlens, seq_lens) -> np.ndarray:
+    """Per-token absolute positions of a packed stream → (T,) int32.
+
+    ``cu_seqlens`` (S+1,) are lane boundaries in the stream; ``seq_lens``
+    (S,) each lane's live KV length *after* this step's rows land.  Lane
+    ``i``'s segment holds its final ``cu[i+1] - cu[i]`` positions, i.e.
+    ``seq_lens[i] - n_i .. seq_lens[i] - 1`` — the packed restatement of the
+    padded step's per-row bound ``kv_len - Lq + i``.
+    """
+    cu = np.asarray(cu_seqlens, np.int64)
+    lens = np.asarray(seq_lens, np.int64)
+    t = int(cu[-1])
+    pos = np.zeros((t,), np.int32)
+    for i in range(len(cu) - 1):
+        n = int(cu[i + 1] - cu[i])
+        pos[cu[i]:cu[i + 1]] = np.arange(lens[i] - n, lens[i], dtype=np.int32)
+    return pos
+
+
+def _as_4d(q: jax.Array) -> jax.Array:
+    t, hq, d = q.shape
+    return q.reshape(t, hq, 1, d)
+
+
+def paged_attention_varlen(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           token_pages: jax.Array, q_pos: jax.Array, *,
+                           cu_seqlens: Optional[Sequence[int]] = None,
+                           scale: Optional[float] = None,
+                           cap: Optional[float] = None,
+                           window: Optional[int] = None,
+                           exp_mode: str = "lut",
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
+                           block_pages: Optional[int] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Ragged paged attention over a packed (T,)-token stream → (T, Hq, D).
+
+    q: (T, Hq, D); k_pool/v_pool: (N, Hkv, page_size, D) with
+    ``Hq % Hkv == 0`` (GQA); token_pages: (T, P) per-token page-table rows;
+    q_pos: (T,) per-token absolute position / causal bound.  ``cu_seqlens``
+    is accepted for callers that carry it (validation, debugging) — the
+    computation depends only on the per-token arrays.  Dead rows (padding
+    the stream to its bucket width) carry an all-scratch table row and
+    ``q_pos = 0``; their output is garbage the caller never reads.
+
+    Dispatch matches :func:`paged_attention`: Pallas kernel on TPU (grid
+    over tokens), jnp page-block scan elsewhere; ``interpret=True`` forces
+    the kernel in interpret mode.
+    """
+    del cu_seqlens                       # packing metadata, not compute input
+    kv_len = jnp.asarray(q_pos, jnp.int32) + 1
+    out = paged_attention(_as_4d(q), k_pool, v_pool, token_pages, kv_len,
+                          scale=scale, cap=cap, window=window,
+                          exp_mode=exp_mode, k_scale=k_scale, v_scale=v_scale,
+                          block_pages=block_pages, interpret=interpret)
+    return out[:, :, 0, :]
+
+
+def paged_attention_varlen_reference(q: jax.Array, k_pool: jax.Array,
+                                     v_pool: jax.Array,
+                                     token_pages: jax.Array,
+                                     q_pos: jax.Array, *,
+                                     cu_seqlens: Optional[Sequence[int]] = None,
+                                     scale: Optional[float] = None,
+                                     cap: Optional[float] = None,
+                                     window: Optional[int] = None,
+                                     exp_mode: str = "lut",
+                                     k_scale: Optional[jax.Array] = None,
+                                     v_scale: Optional[jax.Array] = None,
+                                     block_pages: Optional[int] = None
+                                     ) -> jax.Array:
+    """Pure-jnp varlen reference (the CPU/CI path), pinned explicitly —
+    same batch=T reduction as :func:`paged_attention_varlen` but always the
+    page-block scan, never the Pallas kernel."""
+    del cu_seqlens
+    kv_len = jnp.asarray(q_pos, jnp.int32) + 1
+    out = paged_attention_reference(
+        _as_4d(q), k_pool, v_pool, token_pages, kv_len, scale=scale, cap=cap,
+        window=window, exp_mode=exp_mode, k_scale=k_scale, v_scale=v_scale,
+        block_pages=block_pages)
+    return out[:, :, 0, :]

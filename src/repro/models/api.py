@@ -42,6 +42,11 @@ class Model:
     # mixed in one batch, KV rows written in place through the table
     # (EngineCore.step's workhorse; there is no separate paged decode entry)
     prefill_chunk_paged: Optional[Callable] = None
+    # (params, tokens (T,), pools, token_pages (T, P), pos (T,),
+    # last_idx (lanes,)) → (logits (lanes, V), pools): the token-level
+    # ragged serving step — one packed stream of T = Σ live tokens, no
+    # (lanes, C) padding (EngineCore mode="ragged"'s workhorse)
+    step_ragged: Optional[Callable] = None
 
 
 # --------------------------------------------------------------------------
@@ -124,6 +129,7 @@ def build_model(cfg: ModelConfig) -> Model:
             lambda cfg, params, token, state, index:
             LM.lm_decode_step(cfg, params, token, state, index), cfg),
         prefill_chunk_paged=functools.partial(LM.lm_prefill_chunk_paged, cfg),
+        step_ragged=functools.partial(LM.lm_step_ragged, cfg),
     )
 
 

@@ -165,6 +165,7 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                cache_index: Optional[jax.Array] = None,
                page_table: Optional[jax.Array] = None,
                q_len: Optional[jax.Array] = None,
+               token_pages: Optional[jax.Array] = None,
                xkv: Optional[jax.Array] = None,
                ) -> Tuple[jax.Array, Optional[Params]]:
     """One attention layer.
@@ -185,6 +186,15 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
     before ``L - q_len`` are padding: their writes land on the pool's
     scratch page and their outputs are garbage the caller never reads).
     ``None`` means every row is live (the decode path).
+    ``token_pages``: (T, P) per-token page-table rows — switches the paged
+    path to the *ragged* packed-stream convention: x is one ``(1, T,
+    d_model)`` stream of live tokens from many lanes (no per-lane padding),
+    ``pos`` carries each token's absolute position (1, T), each token's KV
+    row is written at its own (page, offset) and attention runs through the
+    per-token table with per-token causal bounds (``paged_varlen``).  Dead
+    rows (stream padding to the bucket width) carry an all-scratch table
+    row; their writes land on the scratch page, their outputs are garbage
+    the caller never reads.
     ``xkv``: cross-attention source (encoder output); disables cache/rope-k.
     """
     b, l, _ = x.shape
@@ -210,38 +220,59 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
         k = rope_apply(k, jnp.arange(k.shape[2], dtype=jnp.int32), theta)
 
     scale_default = cfg.attn_scale if cfg.attn_scale else cfg.d_head ** -0.5
-    if cache is not None and page_table is not None:
-        # Paged block: cache leaves are page pools.  Write every live row's
-        # K/V in place at its (physical page, in-page offset), then attend
-        # through the page table — no gathered (B, …, P·ps, …) view exists.
-        # L == 1 is decode; L > 1 a chunked-prefill block whose rows sit at
-        # absolute positions cache_index + i (right-aligned when q_len < L).
+    if cache is not None and (token_pages is not None
+                              or page_table is not None):
+        # Paged attention, two packings over one write path.  Cache leaves
+        # are page pools; every live row's K/V is written in place at its
+        # (physical page, in-page offset) and attention reads through the
+        # tables — no gathered (B, …, P·ps, …) view exists.
+        #
+        # - padded block (`page_table` (B, P)): right-aligned rows at
+        #   absolute positions cache_index + i; L == 1 is decode, L > 1 a
+        #   chunked-prefill block; rows before L - q_len are padding.
+        # - ragged stream (`token_pages` (T, P)): x is ONE (1, T, d) packed
+        #   stream of live tokens from many lanes, each with its own
+        #   position (causal bound) and page-table row.  Intra-chunk
+        #   causality holds because a chunk's rows are written before the
+        #   attend; cross-lane isolation because a token's table row names
+        #   only its own lane's pages.  Dead bucket-padding rows carry an
+        #   all-scratch table row.
         assert xkv is None, "paged attention has no cross-attention path"
-        idx = jnp.asarray(cache_index, jnp.int32)       # (B,) block start
         ps = cache["k"].shape[2]
         scratch = cache["k"].shape[0] - 1               # pool's sink page
-        kv_len = idx + l
-        rows = idx[:, None] + jnp.arange(l, dtype=jnp.int32)[None]  # (B, L)
-        if q_len is None:
-            live = jnp.ones(rows.shape, bool)           # decode: all rows
+        if token_pages is not None:
+            p_tok = jnp.asarray(pos, jnp.int32).reshape(-1)     # (T,)
+            slot = jnp.clip(p_tok // ps, 0, token_pages.shape[1] - 1)
+            pids = jnp.take_along_axis(token_pages, slot[:, None], axis=1).T
+            off = (p_tok % ps)[None]                    # (1, T) like pids
         else:
-            live = (jnp.arange(l, dtype=jnp.int32)[None]
-                    >= l - jnp.asarray(q_len, jnp.int32)[:, None])
-        # Padding rows (and their possibly-negative positions) must never
-        # touch a live page: clamp the table lookup, then route them to the
-        # scratch page, whose contents are masked by kv_len on every read.
-        slot = jnp.clip(rows // ps, 0, page_table.shape[1] - 1)
-        pids = jnp.where(live, jnp.take_along_axis(page_table, slot, axis=1),
-                         scratch)                       # (B, L)
-        off = rows % ps
+            idx = jnp.asarray(cache_index, jnp.int32)   # (B,) block start
+            kv_len = idx + l
+            rows = idx[:, None] + jnp.arange(l, dtype=jnp.int32)[None]
+            if q_len is None:
+                live = jnp.ones(rows.shape, bool)       # decode: all rows
+            else:
+                live = (jnp.arange(l, dtype=jnp.int32)[None]
+                        >= l - jnp.asarray(q_len, jnp.int32)[:, None])
+            # Padding rows (and their possibly-negative positions) must
+            # never touch a live page: clamp the table lookup, then route
+            # them to the scratch page (masked by kv_len on every read).
+            slot = jnp.clip(rows // ps, 0, page_table.shape[1] - 1)
+            pids = jnp.where(live,
+                             jnp.take_along_axis(page_table, slot, axis=1),
+                             scratch)                   # (B, L)
+            off = rows % ps
 
         def put(pool, val):
             # val (B, Hkv, L, …) → rows-major (B, L, Hkv, …); the advanced
             # (B, L) page/offset indices scatter one row at a time — the
             # transient is O(B·L), never the (B, P·ps, …) gathered view.
+            # (Ragged: B == 1, L == T, indices shaped (1, T).)
             return pool.at[pids, :, off].set(
                 jnp.moveaxis(val, 2, 1).astype(pool.dtype))
 
+        attn_kw = dict(scale=scale_default, cap=cfg.attn_softcap,
+                       window=window, exp_mode=cfg.exp_mode)
         if "ks" in cache:                    # INT8 pool: values + row scales
             kq_new, ks_new = quantize_kv_rows(k)
             vq_new, vs_new = quantize_kv_rows(v)
@@ -249,21 +280,27 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                 "k": put(cache["k"], kq_new), "v": put(cache["v"], vq_new),
                 "ks": put(cache["ks"], ks_new), "vs": put(cache["vs"], vs_new),
             }
-            from repro.kernels.paged_attention import paged_attention
-            out = paged_attention(
-                q, new_cache["k"], new_cache["v"], page_table, kv_len,
-                scale=scale_default, cap=cfg.attn_softcap, window=window,
-                exp_mode=cfg.exp_mode, k_scale=new_cache["ks"],
-                v_scale=new_cache["vs"])
+            from repro.kernels.paged_attention import (
+                paged_attention, paged_attention_varlen)
+            attn_kw.update(k_scale=new_cache["ks"], v_scale=new_cache["vs"])
+            if token_pages is not None:
+                out = paged_attention_varlen(
+                    jnp.moveaxis(q[0], 1, 0), new_cache["k"], new_cache["v"],
+                    token_pages, p_tok, **attn_kw)      # (T, Hq, Dh)
+                out = jnp.moveaxis(out, 0, 1)[None]     # (1, Hq, T, Dh)
+            else:
+                out = paged_attention(q, new_cache["k"], new_cache["v"],
+                                      page_table, kv_len, **attn_kw)
         else:
             new_cache = {"k": put(cache["k"], k), "v": put(cache["v"], v)}
+            conv = (dict(q_pos=p_tok, page_table=token_pages)
+                    if token_pages is not None
+                    else dict(kv_len=kv_len, page_table=page_table))
             out = attention(q, new_cache["k"], new_cache["v"],
                             backend=backend_for_config(cfg.attn_backend,
                                                        cfg.attn_impl),
-                            scale=scale_default, causal=causal, window=window,
-                            cap=cfg.attn_softcap, block_k=cfg.block_k,
-                            exp_mode=cfg.exp_mode, kv_len=kv_len,
-                            page_table=page_table, fallback=True)
+                            causal=causal, block_k=cfg.block_k,
+                            fallback=True, **attn_kw, **conv)
         out = out.transpose(0, 2, 1, 3).reshape(b, l,
                                                 cfg.num_heads * cfg.d_head)
         return dense_apply(p["wo"], out), new_cache

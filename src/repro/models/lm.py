@@ -16,7 +16,6 @@ naive row; no attention implementation is imported here directly.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -74,7 +73,8 @@ def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
                  pos: jax.Array, cache: Optional[Params],
                  cache_index: Optional[jax.Array], causal: bool,
                  page_table: Optional[jax.Array] = None,
-                 q_len: Optional[jax.Array] = None
+                 q_len: Optional[jax.Array] = None,
+                 token_pages: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     aux = jnp.zeros((), jnp.float32)
     if kind == "mamba":
@@ -85,7 +85,8 @@ def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
     a, new_cache = L.attn_apply(cfg, p["attn"], L.norm_apply(cfg, p["ln1"], x),
                                 kind=kind, pos=pos, causal=causal,
                                 cache=cache, cache_index=cache_index,
-                                page_table=page_table, q_len=q_len)
+                                page_table=page_table, q_len=q_len,
+                                token_pages=token_pages)
     if cfg.post_block_norm:
         a = L.norm_apply(cfg, p["ln1_post"], a)
     x = x + a
@@ -158,7 +159,8 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 pos: jax.Array, caches: Optional[Params] = None,
                 cache_index: Optional[jax.Array] = None, causal: bool = True,
                 page_table: Optional[jax.Array] = None,
-                q_len: Optional[jax.Array] = None
+                q_len: Optional[jax.Array] = None,
+                token_pages: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     kinds, nper, tail = period_layout(cfg)
     shared = params.get("shared_attn")
@@ -181,7 +183,8 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 cfg, kind, pp[str(i)], x, pos=pos,
                 cache=None if pc is None else pc[str(i)],
                 cache_index=cache_index, causal=causal,
-                page_table=page_table, q_len=q_len)
+                page_table=page_table, q_len=q_len,
+                token_pages=token_pages)
             if pc is not None:
                 new_c[str(i)] = lc
             aux = aux + a
@@ -215,7 +218,8 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 cfg, kinds[i % len(kinds)], params["tail"][i], x, pos=pos,
                 cache=None if caches is None else caches["tail"][i],
                 cache_index=cache_index, causal=causal,
-                page_table=page_table, q_len=q_len)
+                page_table=page_table, q_len=q_len,
+                token_pages=token_pages)
             aux_total = aux_total + a
             new_caches["tail"].append(lc)
     return x, (new_caches if caches is not None else None), aux_total
@@ -368,3 +372,39 @@ def lm_prefill_chunk_paged(cfg: ModelConfig, params: Params,
                                  q_len=jnp.asarray(q_len, jnp.int32),
                                  logits_rows=1)
     return logits[:, -1], caches
+
+
+def lm_step_ragged(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                   caches: Params, token_pages: jax.Array, pos: jax.Array,
+                   last_idx: jax.Array) -> Tuple[jax.Array, Params]:
+    """The token-level (ragged) serving step: one packed ``(T,)`` stream.
+
+    Where :func:`lm_prefill_chunk_paged` runs a right-aligned ``(lanes, C)``
+    block — every decode lane padded to the prefill chunk width — this step
+    flattens the batch to ``T = Σ live tokens`` rows (bucketed to a few
+    widths by the scheduler): a step with 3 decode lanes and one 64-token
+    prefill chunk costs 67 token-rows of compute, not 4 × 64.  ``tokens``
+    (T,) is the packed stream (lane segments abutting, dead rows padding
+    the tail), ``pos`` (T,) each token's absolute position (rope + causal
+    bound), ``token_pages`` (T, P) each token's page-table row.  Every
+    token's KV row is written in place at its (physical page, offset) and
+    attention runs through the per-token tables (``paged_varlen``) — no
+    ``(lanes, C)``-padded intermediate exists anywhere in this graph (the
+    ragged-equivalence suite walks the jaxpr to prove it).
+
+    Logit extraction is segment-masked: only ``last_idx`` (lanes,) — the
+    stream index of each lane's final token this step (duplicated/zero for
+    idle lanes) — is unembedded, returning (lanes, V); the caller samples
+    lane ``i`` exactly when the step consumed that lane's last known token.
+    """
+    p_tok = jnp.asarray(pos, jnp.int32)
+    x = L.embed_apply(cfg, params["embed"], tokens[None], p_tok[None])
+    x, caches, _ = trunk_apply(cfg, params["trunk"], x, pos=p_tok[None],
+                               caches=caches, cache_index=None, causal=True,
+                               token_pages=token_pages)
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    # (lanes,) gather BEFORE unembedding: the (T, V) logits tensor would be
+    # the largest activation of the step; only lanes' last rows are needed.
+    x = jnp.take(x[0], jnp.asarray(last_idx, jnp.int32), axis=0)
+    logits = L.unembed_apply(cfg, params["embed"], params.get("lm_head"), x)
+    return maybe_shard(logits, ("dp", "tp")), caches

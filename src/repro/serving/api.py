@@ -72,6 +72,12 @@ class StepOutput:
     # samples) counts as decode.
     prefill_tokens: int                # prompt-stream chunk tokens
     decode_tokens: int                 # sampling-step lanes
+    # Padding-tax accounting: the step's live token rows vs the token rows
+    # the jitted step actually computed (padded (lanes, C) block or bucketed
+    # ragged stream).  live_rows / padded_rows is the step's padding
+    # efficiency; the bench aggregates it per run.
+    live_rows: int = 0
+    padded_rows: int = 0
 
     @property
     def mixed(self) -> bool:

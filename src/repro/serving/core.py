@@ -1,26 +1,41 @@
 """EngineCore: one ``step()`` drives every serving phase through the pool.
 
 The engine owns three things: the page pool (``PagedKVCache``), the
-scheduler, and **one** jitted step function
+scheduler, and one jitted step function per packing mode:
 
-    step(params, pool, table, tokens, kv_len, q_len) → (logits, pool)
+- ``mode="ragged"`` (default) — the token-level packed stream
 
-over a right-aligned ``(lanes, C)`` token block — per lane, ``q_len`` live
-tokens ending at row ``kv_len - 1``; dead rows are left-padding whose KV
-writes land on the pool's scratch page.  A decode lane is ``q_len == 1``, a
-chunked-prefill lane streams ``q_len ≤ C`` prompt tokens, an idle lane is
-``q_len == 0``; all of them share the batch, so chunked prefill and decode
-pipeline through the *same* step — the paper's fine-grained
-attention/FFN pipelining (PAPER.md §pipelining) applied at the serving
-level.  C is ``1`` for decode-only steps and ``chunk_size`` whenever any
-lane prefills, and the page table is padded to a power-of-two width, so a
-stream of arbitrary prompt lengths compiles O(1) step functions — the old
-per-prompt-length prefill buckets (and their recompile storm) are gone,
-along with the contiguous-prefill-then-scatter ``write_prefill`` copy.
+      step(params, pool, token_pages, tokens, pos, last_idx)
+          → (logits (lanes, V), pool)
 
-Sampling stays on the host: greedy picks break exact logit ties to the
-lowest token id (reproducible across engines and platforms), temperature
-sampling draws from a per-engine PRNG stream.
+  The scheduler flattens the step into ``T = Σ live tokens`` dense rows
+  (``RaggedBatch``): lane segments abut, each token carries its own
+  position and page-table row, and T is bucketed to a few widths (powers
+  of two plus 3/2 midpoints) with prefill chunks trimmed to land live work
+  exactly on a bucket edge.  A step with 3 decode lanes and one 64-token
+  prefill chunk costs ~67 token-rows of compute — not 4 × 64, which is
+  what the padded block pays.  Every scheduled row is (almost always) live
+  work: the paper's never-stall-on-padding pipelining (PAPER.md §IV)
+  applied to the serving batch itself.  Steps with *no* raggedness —
+  every lane streaming exactly the step width (all-lane decode, all-lane
+  full chunks) — dispatch to the padded block below instead: there is no
+  padding to remove, and the block form reads each KV page once per chunk
+  where the varlen kernel reads it once per token.
+
+- ``mode="padded"`` — the PR-3 right-aligned ``(lanes, C)`` block
+
+      step(params, pool, table, tokens, kv_len, q_len) → (logits, pool)
+
+  per lane ``q_len`` live tokens ending at row ``kv_len - 1``, dead rows
+  left-padding.  C is 1 for decode-only steps and ``chunk_size`` whenever
+  any lane prefills.  Kept as the equivalence oracle the ragged step is
+  proven against (token-identical on the same traces, float and int8).
+
+Both modes trace O(1) step functions across arbitrary prompt-length
+streams — shapes are keyed by (width bucket × power-of-two table width),
+never by prompt length.  Sampling stays on the host: greedy picks break
+exact logit ties to the lowest token id (reproducible across engines and
+platforms), temperature sampling draws from a per-engine PRNG stream.
 """
 from __future__ import annotations
 
@@ -79,10 +94,16 @@ class EngineCore:
     def __init__(self, cfg: ModelConfig, params: Any, *, lanes: int = 4,
                  page_size: int = 16, num_pages: int = 64,
                  chunk_size: int = 16, max_len: Optional[int] = None,
-                 step_tokens: Optional[int] = None, seed: int = 0):
+                 step_tokens: Optional[int] = None, mode: str = "ragged",
+                 token_buckets: Optional[Any] = None, seed: int = 0):
+        if mode not in ("ragged", "padded"):
+            raise ValueError(f"unknown EngineCore mode {mode!r}; "
+                             f"expected 'ragged' or 'padded'")
         self.cfg = cfg
+        self.mode = mode
         self.model = build_model(cfg)
-        if self.model.prefill_chunk_paged is None:
+        if self.model.prefill_chunk_paged is None or (
+                mode == "ragged" and self.model.step_ragged is None):
             # Typed like the pool's rejections so launchers can catch
             # narrowly instead of swallowing every ValueError.
             raise UnsupportedCacheLayout(
@@ -94,7 +115,8 @@ class EngineCore:
         self.kv = PagedKVCache(self.model, num_pages, page_size)
         self.scheduler = Scheduler(self.kv, lanes=lanes,
                                    chunk_size=chunk_size,
-                                   step_tokens=step_tokens)
+                                   step_tokens=step_tokens,
+                                   token_buckets=token_buckets)
         self.chunk_size = chunk_size
         self.key = jax.random.PRNGKey(seed)
         self.finished: List[Request] = []
@@ -107,9 +129,16 @@ class EngineCore:
             return m.prefill_chunk_paged(params, toks, pool, tbl,
                                          kv_len, q_len)
 
+        def ragged_fn(params, pool, token_pages, toks, pos, last_idx):
+            self.trace_count += 1       # python side effect: counts traces
+            return m.step_ragged(params, toks, pool, token_pages, pos,
+                                 last_idx)
+
         # donated pool: every layer's row writes update in place instead of
         # copying the whole pool each step.
         self._step = jax.jit(step_fn, donate_argnums=(1,))
+        self._ragged = (None if self.model.step_ragged is None
+                        else jax.jit(ragged_fn, donate_argnums=(1,)))
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> None:
@@ -125,8 +154,42 @@ class EngineCore:
 
     def step(self) -> StepOutput:
         """Schedule → one batched model call → sample/finish.  All phases —
-        chunked prefill, decode, admission, preemption — happen here."""
+        chunked prefill, decode, admission, preemption — happen here; the
+        engine's ``mode`` picks the packing (ragged stream / padded block),
+        the token streams are identical either way."""
+        if self.mode == "ragged":
+            return self._step_ragged()
+        return self._step_padded()
+
+    def _step_padded(self) -> StepOutput:
+        """The PR-3 right-aligned (lanes, C) block step (oracle mode)."""
         plans, preempted = self.scheduler.schedule()
+        return self._run_block(plans, preempted)
+
+    def _step_ragged(self) -> StepOutput:
+        """The token-level step (default mode): packed stream, with
+        full-width steps dispatched to the padded block.
+
+        A step whose every lane streams exactly the step width (all-lanes
+        decode, or all-lanes full prefill chunks) has no padding for the
+        ragged packing to remove — and the block form reads each KV page
+        once per *chunk* where the varlen kernel reads it once per *token*.
+        So the engine packs ragged exactly where raggedness exists (mixed
+        phases, partial chunks, idle lanes) and keeps the block's page
+        reuse where it doesn't.  Token streams are identical either way.
+        """
+        s = self.scheduler
+        wants = s.begin_step()
+        c = 1 if all(q == 1 for q in wants.values()) else self.chunk_size
+        if wants and len(wants) == self.lanes and \
+                all(q == c for q in wants.values()):
+            plans, preempted = s.plans_for(wants)
+            return self._run_block(plans, preempted)
+        batch, preempted = s.batch_for(wants)
+        return self._run_stream(batch, preempted)
+
+    def _run_block(self, plans, preempted) -> StepOutput:
+        """Execute lane plans as one right-aligned (lanes, C) block."""
         if not plans:
             return StepOutput(tokens={}, finished=(), preempted=preempted,
                               lanes=0, prefill_tokens=0, decode_tokens=0)
@@ -148,7 +211,32 @@ class EngineCore:
         logits, self.kv.pool = self._step(
             self.params, self.kv.pool, jnp.asarray(tbl), jnp.asarray(toks),
             jnp.asarray(kv_len), jnp.asarray(q_len))
+        return self._finish(plans, logits, preempted,
+                            live=int(sum(p.q_len for p in plans)),
+                            padded=b * c)
 
+    def _run_stream(self, batch, preempted) -> StepOutput:
+        """Execute a RaggedBatch as one packed token stream."""
+        plans = batch.plans
+        if not plans:
+            return StepOutput(tokens={}, finished=(), preempted=preempted,
+                              lanes=0, prefill_tokens=0, decode_tokens=0)
+        # Stream index of each plan's final token; idle tail lanes point at
+        # row 0 (their logits are computed but never read — the (lanes, V)
+        # output shape stays static across schedules).
+        last_idx = np.zeros((self.lanes,), np.int32)
+        last_idx[:len(plans)] = batch.cu_seqlens[1:] - 1
+
+        logits, self.kv.pool = self._ragged(
+            self.params, self.kv.pool, jnp.asarray(batch.table),
+            jnp.asarray(batch.tokens), jnp.asarray(batch.pos),
+            jnp.asarray(last_idx))
+        return self._finish(plans, logits, preempted,
+                            live=batch.live, padded=batch.width)
+
+    def _finish(self, plans, logits, preempted, *, live: int,
+                padded: int) -> StepOutput:
+        """Shared step tail: advance cursors, sample, retire finished."""
         out_tokens = {}
         finished = []
         # Phase comes from the scheduler (remaining-known at planning), not
@@ -175,7 +263,8 @@ class EngineCore:
                 self.scheduler.finish(run)
         return StepOutput(tokens=out_tokens, finished=tuple(finished),
                           preempted=preempted, lanes=len(plans),
-                          prefill_tokens=n_prefill, decode_tokens=n_decode)
+                          prefill_tokens=n_prefill, decode_tokens=n_decode,
+                          live_rows=live, padded_rows=padded)
 
     def run(self, max_steps: int = 100_000) -> List[Request]:
         steps = 0

@@ -27,19 +27,52 @@ Policy
   resident request can always evict its way to the whole pool, so progress
   is guaranteed as long as any single request fits (checked at submit).
 
-The scheduler owns accounting only — queues, tickets, page tables; the
-jax arrays live in :class:`~repro.serving.core.EngineCore`.
+Two packings of the same plan
+-----------------------------
+``schedule()`` emits lane plans the engine runs as a right-aligned
+``(lanes, C)`` block — the padded step, kept as the equivalence oracle.
+``schedule_ragged()`` packs the SAME policy into one dense token stream
+(:class:`RaggedBatch`): ``T = Σ q_len`` token rows, bucketed to a few
+widths (powers of two plus their 3/2 midpoints, the ``token_buckets``
+knob) so the jitted step stays O(1) compiles.  Because prefill work is
+elastic, the packer *trims* prefill chunks (youngest lane first, decode
+lanes never) so the live stream lands exactly on a bucket edge whenever
+one is reachable — live work fills the padded width instead of dead rows
+(``padding_efficiency`` ≈ 1 on mixed steps); only decode-only steps pad
+up.  Trimmed tokens are not lost — the lane's cursor simply advances less
+this step and the remainder is replanned next step.
+
+The scheduler owns accounting only — queues, tickets, page tables, the
+packed numpy arrays; the jax arrays live in
+:class:`~repro.serving.core.EngineCore`.
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.serving.api import Request, RequestState
 from repro.serving.paged import PagedKVCache
+
+
+def default_token_buckets(max_tokens: int) -> Tuple[int, ...]:
+    """Bucket widths for the packed stream: {2^k} ∪ {3·2^(k-1)} up to (and
+    one past) ``max_tokens`` — 1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, …
+
+    Powers of two alone waste up to half the stream on the round-up; the
+    3/2 midpoints cap the pad at ~25% while only doubling the (still O(1))
+    trace-bucket count.  The default ``step_tokens = lanes + chunk`` often
+    IS a midpoint (e.g. 16 + 32 = 48), so full mixed steps land exactly."""
+    ws = {1}
+    w = 1
+    while w < max_tokens:
+        w *= 2
+        ws.add(w)
+        ws.add(w + w // 2)
+    return tuple(sorted(ws))
 
 
 @dataclasses.dataclass(eq=False)
@@ -88,12 +121,33 @@ class LanePlan:
         return self.run.rows + self.q_len == self.run.known()
 
 
+@dataclasses.dataclass(frozen=True)
+class RaggedBatch:
+    """One step's plans packed into a dense token stream (see module doc).
+
+    Lane segments abut: stream indices ``cu_seqlens[i] .. cu_seqlens[i+1]``
+    belong to ``plans[i]`` (also recorded per token in ``lane_id``).  Rows
+    past ``live`` are dead bucket padding: token 0, position 0, lane −1,
+    an all-scratch table row — their compute lands on the pool's scratch
+    page and is never read back.
+    """
+    plans: List[LanePlan]
+    tokens: np.ndarray        # (width,) int32 packed token stream
+    pos: np.ndarray           # (width,) int32 absolute position per token
+    lane_id: np.ndarray       # (width,) int32 plan index per token; −1 dead
+    table: np.ndarray         # (width, P) int32 per-token page-table rows
+    cu_seqlens: np.ndarray    # (len(plans)+1,) int32 lane boundaries
+    live: int                 # Σ q_len — real token rows in the stream
+    width: int                # bucketed stream width (= tokens.shape[0])
+
+
 class Scheduler:
     """Continuous batching over a :class:`PagedKVCache` (see module doc)."""
 
     def __init__(self, kv: PagedKVCache, *, lanes: int = 4,
                  chunk_size: int = 16,
-                 step_tokens: Optional[int] = None):
+                 step_tokens: Optional[int] = None,
+                 token_buckets: Optional[Sequence[int]] = None):
         assert chunk_size >= 1
         self.kv = kv
         self.lanes = lanes
@@ -102,6 +156,14 @@ class Scheduler:
         # admits every decode lane plus one full prefill chunk — prompts
         # stream through spare capacity without monopolising the batch.
         self.step_tokens = step_tokens or (lanes + chunk_size)
+        # Ragged-stream width buckets (must cover step_tokens; 1 for the
+        # degenerate single-decode step is always included).
+        self.token_buckets: Tuple[int, ...] = tuple(sorted(
+            set(token_buckets) | {1} if token_buckets
+            else default_token_buckets(self.step_tokens)))
+        assert self.token_buckets[-1] >= self.step_tokens, (
+            f"token_buckets {self.token_buckets} do not cover "
+            f"step_tokens={self.step_tokens}")
         self.waiting: List[RunningRequest] = []     # ordered by ticket
         self.running: List[RunningRequest] = []     # ordered by ticket
         self._ticket = 0
@@ -179,20 +241,12 @@ class Scheduler:
             bisect.insort(self.running, cand, key=lambda r: r.ticket)
 
     # ---------------------------------------------------------------- plan
-    def schedule(self) -> Tuple[List[LanePlan], Tuple[int, ...]]:
-        """→ (lane plans for this step, uids preempted while planning).
-
-        The token budget is spent decode-lanes-first (fairness); pages are
-        then granted in strict ticket order (who may evict whom is
-        seniority), and only for tokens that actually got budget — a
-        budget-starved lane never evicts a resident for rows it will not
-        write this step.  A lane that gets no budget or loses its pages
-        simply does not appear in the plan.
-        """
-        self._evicted_now = []
-        self._admit()
+    def _plan_wants(self) -> Dict[int, int]:
+        """Split the step's token budget: ticket → q_len.  Decode lanes
+        (one token each) are planned first so prefill bursts never starve
+        resident decodes; prefill lanes then take chunks, oldest first."""
         budget = self.step_tokens
-        wants = {}                                    # ticket → q_len
+        wants: Dict[int, int] = {}
         for run in sorted(self.running,
                           key=lambda r: (r.remaining() > 1, r.ticket)):
             q = min(self.chunk_size, run.remaining(), budget)
@@ -200,6 +254,14 @@ class Scheduler:
                 continue
             budget -= q
             wants[run.ticket] = q
+        return wants
+
+    def _grant_plans(self, wants: Dict[int, int]) -> List[LanePlan]:
+        """Grant pages in strict ticket order (seniority decides who may
+        evict whom), and only for tokens that actually got budget — a
+        budget-starved lane never evicts a resident for rows it will not
+        write this step.  A lane that gets no budget or loses its pages
+        simply does not appear in the plan."""
         plans: List[LanePlan] = []
         for run in list(sorted(self.running, key=lambda r: r.ticket)):
             if run not in self.running:
@@ -210,4 +272,110 @@ class Scheduler:
             run.req.state = (RequestState.DECODE if run.remaining() == 1
                              else RequestState.PREFILL)
             plans.append(LanePlan(run, q))
+        return plans
+
+    def begin_step(self) -> Dict[int, int]:
+        """Admit waiters and split the token budget → ticket → q_len wants.
+
+        The two-phase API lets the engine pick the packing *after* seeing
+        the plan (the ragged engine runs full-width steps as padded blocks
+        — no padding to remove, and the block form reads each KV page once
+        per chunk instead of once per token): ``begin_step()`` then exactly
+        one of :meth:`plans_for` / :meth:`batch_for`."""
+        self._evicted_now = []
+        self._admit()
+        return self._plan_wants()
+
+    def plans_for(self, wants: Dict[int, int]
+                  ) -> Tuple[List[LanePlan], Tuple[int, ...]]:
+        """Finish a step as padded-block lane plans → (plans, preempted)."""
+        plans = self._grant_plans(wants)
         return plans, tuple(self._evicted_now)
+
+    def schedule(self) -> Tuple[List[LanePlan], Tuple[int, ...]]:
+        """→ (lane plans for this step, uids preempted while planning).
+        The engine runs these as a right-aligned (lanes, C) block — the
+        padded step; :meth:`schedule_ragged` is the packed-stream twin."""
+        return self.plans_for(self.begin_step())
+
+    # -------------------------------------------------------- ragged plan
+    def _bucket_up(self, t: int) -> int:
+        """Smallest bucket width ≥ t (t ≤ step_tokens ≤ buckets[-1])."""
+        for w in self.token_buckets:
+            if w >= t:
+                return w
+        return self.token_buckets[-1]
+
+    def _trim_to_bucket(self, wants: Dict[int, int]) -> Dict[int, int]:
+        """Trim prefill tokens (never decodes) so the live stream lands on
+        a bucket edge: the padded width is then all live work.  Youngest
+        prefill lanes lose tokens first (FCFS-consistent), but every
+        planned lane keeps ≥ 1 token — a lane trimmed to zero would see
+        the identical plan next step and starve for as long as the decode
+        lanes keep running (e.g. 8 decode lanes exactly filling a bucket
+        plus a 2-token prefill tail).  When the bucket edge is unreachable
+        under that progress guarantee — or every bucket ≤ total sits below
+        the decode floor — pad up instead."""
+        total = sum(wants.values())
+        if total == 0 or total in self.token_buckets:
+            return wants
+        runs = {r.ticket: r for r in self.running}
+        floor = sum(q for t, q in wants.items()
+                    if runs[t].remaining() == 1)      # decodes: untrimmable
+        below = [w for w in self.token_buckets if floor <= w <= total]
+        if not below:
+            return wants                              # decode-bound: pad up
+        cut = total - below[-1]
+        trimmable = sum(q - 1 for t, q in wants.items()
+                        if runs[t].remaining() > 1)
+        if cut > trimmable:
+            return wants                              # would starve: pad up
+        for tkt in sorted(wants, reverse=True):       # youngest first
+            if cut == 0:
+                break
+            if runs[tkt].remaining() == 1:
+                continue
+            take = min(cut, wants[tkt] - 1)
+            wants[tkt] -= take
+            cut -= take
+        return wants
+
+    def pack(self, plans: List[LanePlan]) -> RaggedBatch:
+        """Flatten lane plans into one dense bucketed token stream."""
+        live = sum(p.q_len for p in plans)
+        width = self._bucket_up(max(live, 1))
+        pw = max((len(p.run.pages) for p in plans), default=1)
+        pw = 1 << max(pw - 1, 0).bit_length()         # table-width bucket
+        scratch = self.kv.scratch
+        tokens = np.zeros((width,), np.int32)
+        pos = np.zeros((width,), np.int32)
+        lane_id = np.full((width,), -1, np.int32)
+        table = np.full((width, pw), scratch, np.int32)
+        cu = np.zeros((len(plans) + 1,), np.int32)
+        t = 0
+        for i, p in enumerate(plans):
+            q = p.q_len
+            tokens[t:t + q] = p.run.next_tokens(q)
+            pos[t:t + q] = p.run.rows + np.arange(q, dtype=np.int32)
+            lane_id[t:t + q] = i
+            table[t:t + q, :len(p.run.pages)] = np.asarray(
+                p.run.pages, np.int32)[None, :]
+            t += q
+            cu[i + 1] = t
+        return RaggedBatch(plans=plans, tokens=tokens, pos=pos,
+                           lane_id=lane_id, table=table, cu_seqlens=cu,
+                           live=live, width=width)
+
+    def batch_for(self, wants: Dict[int, int]
+                  ) -> Tuple[RaggedBatch, Tuple[int, ...]]:
+        """Finish a step as a packed ragged stream → (batch, preempted).
+        The wants are trimmed to a bucket edge *before* pages are granted,
+        so no resident is ever evicted for rows the trim dropped."""
+        plans = self._grant_plans(self._trim_to_bucket(wants))
+        return self.pack(plans), tuple(self._evicted_now)
+
+    def schedule_ragged(self) -> Tuple[RaggedBatch, Tuple[int, ...]]:
+        """→ (packed token stream for this step, uids preempted planning).
+        Same admission / fairness / eviction policy as :meth:`schedule`,
+        packed instead of padded."""
+        return self.batch_for(self.begin_step())

@@ -1,17 +1,26 @@
-"""EngineCore + Scheduler: the request-level serving API.
+"""EngineCore + Scheduler: the request-level serving API, both packings.
 
-Covers the redesign's contracts: mixed chunked-prefill + decode batches are
-token-identical to the PR-2 engines (float and int8); a stream of distinct
-prompt lengths compiles O(1) step functions (chunking makes shapes static);
-preemption-by-eviction resumes token-identically; chunked paged prefill
-matches the contiguous prefill oracle over ragged lengths, chunk sizes
-{1, ps, 3·ps}, GQA and int8 pools; token-budget fairness keeps decode lanes
-ahead of prefill bursts; sliding-window configs page when page_size ≤
-window."""
+Covers the serving contracts: mixed chunked-prefill + decode batches are
+token-identical to the PR-2 engines (float and int8) in BOTH step packings
+— the PR-3 right-aligned (lanes, C) block and the token-level ragged
+stream, which is additionally proven token-identical to the padded step on
+the same traces; a stream of distinct prompt lengths compiles O(1) step
+functions in either mode (never keyed by prompt length); the ragged step
+graph contains no (lanes, C)-padded intermediate (jaxpr walk); ragged
+packing never exceeds the token budget, keeps cu_seqlens/lane ids
+consistent, and preserves decode-first fairness and token-identical
+preemption-resume; chunked paged prefill matches the contiguous prefill
+oracle over ragged lengths, chunk sizes {1, ps, 3·ps}, GQA and int8 pools;
+sliding-window configs page when page_size ≤ window."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI image without hypothesis: seeded fallback
+    from tests._hypothesis_stub import given, settings, st
 
 from repro.configs import get_config
 from repro.models import build_model
@@ -39,14 +48,16 @@ def by_uid(done):
 
 # --------------------------------------------------- mixed-batch identity --
 
+@pytest.mark.parametrize("mode", ["padded", "ragged"])
 @pytest.mark.parametrize("kv_quant", [False, True])
-def test_step_token_identical_to_pr2_engines(kv_quant):
+def test_step_token_identical_to_pr2_engines(kv_quant, mode):
     """EngineCore.step() with mixed chunked-prefill + decode lanes emits the
     same greedy token streams as the slot-contiguous engine on the same
-    request trace (lowest-index tie-break), float and int8.  Prompt lengths
-    straddle chunk and page boundaries so early requests are decoding while
-    later ones still stream prefill chunks — the mixed batch is exercised,
-    not just reachable."""
+    request trace (lowest-index tie-break), float and int8, in both the
+    padded-block and ragged-stream packings.  Prompt lengths straddle chunk
+    and page boundaries so early requests are decoding while later ones
+    still stream prefill chunks — the mixed batch is exercised, not just
+    reachable."""
     cfg, params = build(kv_quant=kv_quant)
     lens = (3, 21, 9, 14, 6)
     news = (7, 5, 9, 4, 6)
@@ -60,7 +71,7 @@ def test_step_token_identical_to_pr2_engines(kv_quant):
     want = by_uid(slot.run())
 
     core = EngineCore(cfg, params, lanes=3, page_size=8, num_pages=24,
-                      chunk_size=8)
+                      chunk_size=8, mode=mode)
     submit_all(core)
     outs = []
     while core.scheduler.has_work():
@@ -69,19 +80,53 @@ def test_step_token_identical_to_pr2_engines(kv_quant):
     assert any(o.mixed for o in outs), "no step mixed prefill with decode"
 
 
+@pytest.mark.parametrize("kv_quant", [False, True])
+def test_ragged_step_token_identical_to_padded_step(kv_quant):
+    """The ragged packed-stream step vs the PR-3 padded step as oracle, on
+    the same mixed prefill+decode traces (float and int8): identical token
+    streams, and the ragged run's padding efficiency (live rows / computed
+    rows) strictly dominates the padded run's."""
+    cfg, params = build(kv_quant=kv_quant)
+    lens = (5, 27, 11, 18, 8, 3)
+    news = (6, 4, 8, 3, 7, 5)
+
+    def run(mode):
+        eng = EngineCore(cfg, params, lanes=3, page_size=8, num_pages=24,
+                         chunk_size=8, mode=mode)
+        for i, p in enumerate(prompts_for(cfg, 31, lens)):
+            eng.submit(Request(uid=i, prompt=p, max_new=news[i]))
+        outs = []
+        while eng.scheduler.has_work():
+            outs.append(eng.step())
+        return by_uid(eng.finished), outs
+
+    want, outs_p = run("padded")
+    got, outs_r = run("ragged")
+    assert got == want, "ragged step diverged from the padded oracle"
+    assert any(o.mixed for o in outs_r), "no ragged step mixed the phases"
+
+    def eff(outs):
+        return (sum(o.live_rows for o in outs)
+                / max(sum(o.padded_rows for o in outs), 1))
+
+    assert eff(outs_r) > eff(outs_p), (eff(outs_r), eff(outs_p))
+    assert eff(outs_r) >= 0.9, f"ragged packing wasted rows: {eff(outs_r)}"
+
+
 # ------------------------------------------------------- compile counting --
 
-def test_distinct_prompt_lengths_compile_O1_step_functions():
-    """The recompile fallout of the per-prompt-length b=1 prefill is gone:
-    chunking makes every step shape static, so step functions are keyed
-    only by (chunk width ∈ {1, C}) × (power-of-two table width) — never by
-    prompt length.  Lengths 3/12/21 deterministically cover all six combos
-    for this pool; a second stream of seven *new* distinct lengths then
-    traces nothing at all (the PR-2 engines compiled one prefill per
-    length)."""
+@pytest.mark.parametrize("mode", ["padded", "ragged"])
+def test_distinct_prompt_lengths_compile_O1_step_functions(mode):
+    """The recompile fallout of the per-prompt-length b=1 prefill is gone in
+    both packings: step shapes are keyed by (width bucket × power-of-two
+    table width) — the padded step's widths are {1, C}, the ragged step's
+    the scheduler's token-bucket set — never by prompt length.  A first
+    stream warms every reachable combo; a second stream of seven *new*
+    distinct lengths then traces nothing at all (the PR-2 engines compiled
+    one prefill per length)."""
     cfg, params = build()
     eng = EngineCore(cfg, params, lanes=1, page_size=8, num_pages=64,
-                     chunk_size=8)
+                     chunk_size=8, mode=mode)
 
     def serve(lens, seed):
         for i, p in enumerate(prompts_for(cfg, seed, lens)):
@@ -89,10 +134,16 @@ def test_distinct_prompt_lengths_compile_O1_step_functions():
         eng.run()
         eng.finished.clear()
 
-    serve((3, 12, 21), seed=1)
+    # Warm every reachable (width bucket × table width) combo: lengths
+    # 2..22 cover all chunk remainders at table widths 1/2/4, and 24/27/29
+    # add the full-chunk and remainder cases at width 4.
+    serve(tuple(range(2, 23)) + (24, 27, 29), seed=1)
     traced = eng.trace_count
-    assert traced <= 6          # widths {1, C} × table buckets {1, 2, 4}
-    serve((4, 7, 11, 13, 17, 19, 20), seed=2)   # 7 new distinct lengths
+    # O(1) across the bucket set: bounded by width buckets × table buckets
+    # ({1, 2, 4} for this pool), and never by the number of prompt lengths.
+    widths = 2 if mode == "padded" else len(eng.scheduler.token_buckets)
+    assert traced <= 3 * widths, (traced, widths)
+    serve((23, 25, 26, 28, 30), seed=2)        # 5 new distinct lengths
     assert eng.trace_count == traced, (
         f"new prompt lengths retraced the step: {traced} → "
         f"{eng.trace_count}")
@@ -100,11 +151,14 @@ def test_distinct_prompt_lengths_compile_O1_step_functions():
 
 # ------------------------------------------------------------ preemption --
 
-def test_preempted_request_resumes_token_identical():
+@pytest.mark.parametrize("mode", ["padded", "ragged"])
+def test_preempted_request_resumes_token_identical(mode):
     """Fill the pool with a long-running request, admit a longer prompt;
     the pool exhausts mid-flight, the youngest resident is evicted
     (recompute preemption) and later resumes — and every request's token
-    stream is identical to an uncontended (solo, full-pool) run."""
+    stream is identical to an uncontended (solo, full-pool) run.  Holds in
+    both packings: ragged trim/packing changes step shapes, never the
+    replayed stream."""
     cfg, params = build()
     specs = [(4, 26), (12, 14)]            # (prompt_len, max_new)
     prompts = prompts_for(cfg, 21, [lp for lp, _ in specs])
@@ -112,13 +166,13 @@ def test_preempted_request_resumes_token_identical():
     solo = {}
     for uid, (lp, mn) in enumerate(specs):
         eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=16,
-                         chunk_size=4)
+                         chunk_size=4, mode=mode)
         eng.submit(Request(uid=uid, prompt=prompts[uid], max_new=mn))
         solo[uid] = eng.run()[0].tokens
 
     # contended: 8 pages cannot hold both peaks (8 + 7 pages)
     eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=8,
-                     chunk_size=4)
+                     chunk_size=4, mode=mode)
     preempted_seen = []
     for uid, (lp, mn) in enumerate(specs):
         eng.submit(Request(uid=uid, prompt=prompts[uid], max_new=mn))
@@ -219,13 +273,15 @@ def test_chunked_prefill_matches_contiguous_oracle(chunk_factor, kv_quant):
 
 # ------------------------------------------------------------- fairness --
 
-def test_token_budget_keeps_decode_ahead_of_prefill():
+@pytest.mark.parametrize("mode", ["padded", "ragged"])
+def test_token_budget_keeps_decode_ahead_of_prefill(mode):
     """With a step token budget, resident decode lanes always get their one
     token before prefill chunks spend the rest — a long prompt streams
-    through spare capacity instead of starving decodes."""
+    through spare capacity instead of starving decodes.  Ragged trim only
+    ever shrinks prefill chunks, so the guarantee survives packing."""
     cfg, params = build()
     eng = EngineCore(cfg, params, lanes=2, page_size=8, num_pages=16,
-                     chunk_size=8, step_tokens=5)
+                     chunk_size=8, step_tokens=5, mode=mode)
     eng.submit(Request(uid=0, prompt=prompts_for(cfg, 1, (4,))[0],
                        max_new=12))
     eng.step()                              # uid 0 resident, decoding
@@ -278,6 +334,186 @@ def test_empty_prompt_rejected_at_submit():
     with pytest.raises(ValueError, match="empty prompt"):
         eng.submit(Request(uid=0, prompt=np.array([], np.int32), max_new=4))
     assert not eng.scheduler.has_work()
+
+
+# ----------------------------------------------- ragged graph guarantees --
+
+def test_ragged_graph_has_no_padded_intermediate():
+    """The ragged step graph must never materialise a (lanes, C)-padded
+    block: every intermediate of the traced step is checked for an
+    adjacent (lanes, chunk) dim pair.  lanes=3 × chunk=24 shares no
+    adjacent pair with any smoke-config dimension or the T=48 stream, so a
+    hit can only be the padded block.  The padded step itself is the
+    sanity check that the detector fires."""
+    from tests.test_paged_serving import _jaxpr_shapes
+
+    cfg, params = build()
+    lanes, chunk, ps = 3, 24, 8
+    eng = EngineCore(cfg, params, lanes=lanes, page_size=ps, num_pages=32,
+                     chunk_size=chunk)
+    t, pw = 48, 4                       # 3 decodes + a 45-token chunk share
+    jaxpr = jax.make_jaxpr(eng._ragged)(
+        eng.params, eng.kv.pool,
+        jnp.full((t, pw), eng.kv.scratch, jnp.int32),
+        jnp.zeros((t,), jnp.int32), jnp.zeros((t,), jnp.int32),
+        jnp.zeros((lanes,), jnp.int32))
+
+    def padded_pairs(shapes):
+        return [s for s in shapes
+                if any(s[i] == lanes and s[i + 1] == chunk
+                       for i in range(len(s) - 1))]
+
+    bad = padded_pairs(_jaxpr_shapes(jaxpr.jaxpr))
+    assert not bad, f"(lanes, C)-padded intermediate in ragged graph: {bad}"
+
+    # sanity: the detector does catch the padded step's block
+    padded = jax.make_jaxpr(eng._step)(
+        eng.params, eng.kv.pool,
+        jnp.full((lanes, pw), eng.kv.scratch, jnp.int32),
+        jnp.zeros((lanes, chunk), jnp.int32),
+        jnp.zeros((lanes,), jnp.int32), jnp.zeros((lanes,), jnp.int32))
+    assert padded_pairs(_jaxpr_shapes(padded.jaxpr))
+
+
+# ------------------------------------------------ scheduler pack properties --
+
+def _sim_engine(sched, batch):
+    """Advance scheduler state the way EngineCore._finish would, without
+    running any jax compute (greedy tokens faked as 0)."""
+    for p in batch.plans:
+        run = p.run
+        sample = p.sample
+        run.rows += p.q_len
+        if not sample:
+            continue
+        run.req.tokens.append(0)
+        if len(run.req.tokens) >= run.req.max_new:
+            sched.finish(run)
+
+
+def _make_scheduler(num_pages=64, lanes=3, chunk=8, step_tokens=None):
+    from repro.serving import PagedKVCache, Scheduler
+    cfg = get_config("deepseek-7b-smoke")
+    kv = PagedKVCache(build_model(cfg), num_pages, 8)
+    return Scheduler(kv, lanes=lanes, chunk_size=chunk,
+                     step_tokens=step_tokens), cfg
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_ragged_packing_properties(seed):
+    """Every schedule_ragged() batch, across a random request stream:
+    packing never exceeds the token budget; the width is the tightest
+    bucket; cu_seqlens is monotone and consistent with lane ids, positions,
+    tokens and per-token table rows; decode lanes are never trimmed."""
+    rng = np.random.default_rng(seed)
+    sched, cfg = _make_scheduler()
+    for uid in range(int(rng.integers(2, 7))):
+        sched.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(1, 30))).astype(np.int32),
+            max_new=int(rng.integers(1, 8))))
+    steps = 0
+    while sched.has_work():
+        steps += 1
+        assert steps < 500, "scheduler did not drain"
+        decode_runs = [r for r in sched.running if r.remaining() == 1]
+        rows_before = {r.ticket: r.rows for r in sched.running}
+        batch, _ = sched.schedule_ragged()
+        plans, cu = batch.plans, batch.cu_seqlens
+
+        # budget + bucket tightness
+        assert batch.live == sum(p.q_len for p in plans) == int(cu[-1])
+        assert batch.live <= sched.step_tokens
+        assert batch.width in sched.token_buckets
+        assert batch.width >= max(batch.live, 1)
+        tighter = [w for w in sched.token_buckets
+                   if max(batch.live, 1) <= w < batch.width]
+        assert not tighter, f"width {batch.width} not tightest: {tighter}"
+
+        # cu_seqlens ↔ lane_id ↔ pos ↔ tokens ↔ table consistency
+        assert cu[0] == 0 and np.all(np.diff(cu) >= 1)
+        for i, p in enumerate(plans):
+            lo, hi = int(cu[i]), int(cu[i + 1])
+            assert hi - lo == p.q_len
+            assert np.all(batch.lane_id[lo:hi] == i)
+            start = rows_before.get(p.run.ticket, 0)  # 0: admitted this step
+            np.testing.assert_array_equal(
+                batch.pos[lo:hi], start + np.arange(p.q_len))
+            np.testing.assert_array_equal(
+                batch.tokens[lo:hi], p.run.next_tokens(p.q_len))
+            npg = len(p.run.pages)
+            assert npg >= sched.kv.pages_needed(start + p.q_len)
+            np.testing.assert_array_equal(
+                batch.table[lo:hi, :npg],
+                np.tile(np.asarray(p.run.pages, np.int32), (p.q_len, 1)))
+            assert np.all(batch.table[lo:hi, npg:] == sched.kv.scratch)
+        assert np.all(batch.lane_id[batch.live:] == -1)
+        assert np.all(batch.table[batch.live:] == sched.kv.scratch)
+
+        # decode-first, trim-exempt: every resident decode lane runs intact
+        for r in decode_runs:
+            if r in sched.running:       # not evicted while planning
+                mine = [p for p in plans if p.run is r]
+                assert mine and mine[0].q_len == 1, \
+                    "decode lane trimmed or starved by ragged packing"
+        _sim_engine(sched, batch)
+    assert sched.kv.free_pages == sched.kv.num_pages
+
+
+def test_trim_never_starves_a_prefill_lane():
+    """Regression: 8 decode lanes exactly fill a bucket (floor = 8) while a
+    2-token prefill tail wants the other 2 tokens.  A trim that zeroed the
+    tail would see the identical plan every step and starve it for the
+    decodes' whole lifetime; the progress guarantee (every planned lane
+    keeps ≥ 1 token, else pad up) must finish it promptly."""
+    rng = np.random.default_rng(0)
+    sched, cfg = _make_scheduler(num_pages=64, lanes=9, chunk=16)
+    for uid in range(8):
+        sched.submit(Request(uid=uid, prompt=np.array([1], np.int32),
+                             max_new=40))
+    sched.submit(Request(
+        uid=8, prompt=rng.integers(0, cfg.vocab_size, 2).astype(np.int32),
+        max_new=1))
+    for _ in range(4):          # uid 8 needs ≤ 2 planned steps to finish
+        batch, _ = sched.schedule_ragged()
+        assert batch.live <= sched.step_tokens
+        _sim_engine(sched, batch)
+        if not any(r.req.uid == 8 for r in sched.running):
+            break
+    assert not any(r.req.uid == 8 for r in sched.running), \
+        "prefill lane starved by trim-to-bucket"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_ragged_packing_under_preemption(seed):
+    """A pool far too small for the offered load: schedule_ragged must keep
+    its packing invariants while evicting — evicted requests rewind to row
+    0 and hold no pages, and the stream drains completely."""
+    rng = np.random.default_rng(seed)
+    sched, cfg = _make_scheduler(num_pages=8, lanes=3, chunk=4)
+    for uid in range(4):
+        sched.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(4, 16))).astype(np.int32),
+            max_new=int(rng.integers(4, 12))))
+    evictions = 0
+    steps = 0
+    while sched.has_work():
+        steps += 1
+        assert steps < 2000, "scheduler did not drain under preemption"
+        batch, preempted = sched.schedule_ragged()
+        evictions += len(preempted)
+        assert batch.live <= sched.step_tokens
+        assert batch.width in sched.token_buckets
+        for r in sched.waiting:
+            assert r.rows == 0 and r.pages == [], \
+                "evicted request kept pages or cursor state"
+        _sim_engine(sched, batch)
+    assert sched.kv.free_pages == sched.kv.num_pages
 
 
 # ------------------------------------------------------------ StepOutput --

@@ -1,0 +1,268 @@
+"""Varlen (ragged) paged attention: the packed-token-stream kernel proven
+against BOTH oracles — the contiguous backends on the gathered view (per
+lane, at each token's own causal bound) and the padded-paged chunk kernel
+(the PR-3 step the ragged path replaces) — over ragged per-lane lengths,
+GQA ratios, int8 pools and shuffled page tables; plus the ragged calling
+convention through the attention-API registry."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI image without hypothesis: seeded fallback
+    from tests._hypothesis_stub import given, settings, st
+
+from repro.core.attention_api import (AttentionCall, attention,
+                                      resolve_backend)
+from repro.core.streaming_attention import quantize_kv_rows
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_varlen,
+                                           paged_attention_varlen_reference,
+                                           varlen_positions)
+
+
+def make_pool(rng, n, hkv, ps, d):
+    return (jnp.asarray(rng.normal(size=(n, hkv, ps, d)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(n, hkv, ps, d)).astype(np.float32)))
+
+
+def gather_view(pool, tbl):
+    """(N, Hkv, ps, D) + (S, P) → the contiguous (S, Hkv, P·ps, D) view the
+    ragged path exists to avoid — used here only as the oracle input."""
+    out = jnp.moveaxis(jnp.take(pool, tbl, axis=0), 1, 2)
+    s = out.shape
+    return out.reshape(s[0], s[1], s[2] * s[3], *s[4:])
+
+
+def make_stream(rng, *, lanes, hq, d, ps, p, n):
+    """A random packed stream: per-lane chunk lengths 1..4 at ragged live
+    lengths, shuffled per-lane page tables → every varlen input array."""
+    nq = rng.integers(1, 5, size=lanes)                   # chunk per lane
+    lens = np.array([int(rng.integers(nq[i], p * ps + 1))
+                     for i in range(lanes)])              # live after chunk
+    cu = np.concatenate([[0], np.cumsum(nq)]).astype(np.int32)
+    t = int(cu[-1])
+    lane_tbl = np.stack([rng.permutation(n)[:p] for _ in range(lanes)])
+    q = jnp.asarray(rng.normal(size=(t, hq, d)).astype(np.float32))
+    q_pos = varlen_positions(cu, lens)
+    token_tbl = lane_tbl[np.repeat(np.arange(lanes), nq)]  # (T, P)
+    return q, jnp.asarray(token_tbl, jnp.int32), jnp.asarray(q_pos), \
+        cu, jnp.asarray(lane_tbl, jnp.int32), lens, nq
+
+
+def contiguous_oracle(backend, q, cu, lane_tbl, lens, kp, vp, **kw):
+    """Per-lane contiguous attention on the gathered view: lane i's chunk
+    rows at q_offset = len_i - nq_i — concatenated back into the stream."""
+    kg, vg = gather_view(kp, lane_tbl), gather_view(vp, lane_tbl)
+    outs = []
+    for i in range(len(lens)):
+        nq = int(cu[i + 1] - cu[i])
+        li = int(lens[i])
+        qi = jnp.moveaxis(q[cu[i]:cu[i + 1]], 0, 1)[None]  # (1, Hq, nq, D)
+        o = attention(qi, kg[i:i + 1], vg[i:i + 1], backend=backend,
+                      causal=True, q_offset=li - nq, kv_len=li,
+                      exp_mode="lut", **kw)
+        outs.append(np.moveaxis(np.asarray(o[0]), 0, 1))   # (nq, Hq, D)
+    return np.concatenate(outs, axis=0)
+
+
+def padded_paged_oracle(q, cu, lane_tbl, lens, kp, vp, **kw):
+    """The PR-3 padded chunk kernel, lane by lane: q (1, Hq, nq, D) at
+    kv_len = len_i through the lane's table row."""
+    outs = []
+    for i in range(len(lens)):
+        qi = jnp.moveaxis(q[cu[i]:cu[i + 1]], 0, 1)[None]
+        o = paged_attention(qi, kp, vp, lane_tbl[i:i + 1],
+                            jnp.asarray([int(lens[i])], jnp.int32),
+                            exp_mode="lut", **kw)
+        outs.append(np.moveaxis(np.asarray(o[0]), 0, 1))
+    return np.concatenate(outs, axis=0)
+
+
+# ------------------------------------------------------------- equivalence --
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 4),              # GQA group size
+       st.integers(1, 4),              # lanes packed into the stream
+       st.sampled_from([4, 8, 16]),    # page size
+       st.integers(2, 5),              # table width (pages per lane)
+       st.integers(0, 10_000))         # seed
+def test_varlen_matches_contiguous_backends(group, lanes, ps, p, seed):
+    """Varlen reference == naive/jnp on the gathered view at every token's
+    own causal bound, for shuffled tables, ragged lane lengths, ragged
+    chunk lengths and every GQA packing."""
+    rng = np.random.default_rng(seed)
+    hkv, d = 2, 16
+    hq = hkv * group
+    n = p * lanes + 1
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu, lane_tbl, lens, _ = make_stream(
+        rng, lanes=lanes, hq=hq, d=d, ps=ps, p=p, n=n)
+
+    got = np.asarray(paged_attention_varlen_reference(
+        q, kp, vp, token_tbl, q_pos, cu_seqlens=cu, exp_mode="lut"))
+    for backend in ("naive", "jnp"):
+        want = contiguous_oracle(backend, q, cu, lane_tbl, lens, kp, vp)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4,
+                                   err_msg=backend)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.sampled_from([4, 8]),
+       st.integers(0, 10_000))
+def test_varlen_matches_padded_paged_oracle(group, lanes, ps, seed):
+    """Varlen == the padded-paged chunk kernel (the step it replaces) on
+    the same pools/tables/positions — the flattening changes the batch
+    layout, never a number."""
+    rng = np.random.default_rng(seed)
+    hkv, d, p = 2, 16, 3
+    hq = hkv * group
+    n = p * lanes + 2
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu, lane_tbl, lens, _ = make_stream(
+        rng, lanes=lanes, hq=hq, d=d, ps=ps, p=p, n=n)
+
+    got = np.asarray(paged_attention_varlen_reference(
+        q, kp, vp, token_tbl, q_pos, exp_mode="lut"))
+    want = padded_paged_oracle(q, cu, lane_tbl, lens, kp, vp)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([4, 8]), st.integers(0, 10_000))
+def test_varlen_kernel_interpret_matches_reference(group, ps, seed):
+    """The Pallas kernel (interpret mode, grid over tokens) == the jnp
+    varlen reference."""
+    rng = np.random.default_rng(seed)
+    lanes, hkv, d, p = 3, 2, 16, 3
+    n = p * lanes + 1
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu, _, _, _ = make_stream(
+        rng, lanes=lanes, hq=hkv * group, d=d, ps=ps, p=p, n=n)
+
+    ref = paged_attention_varlen_reference(q, kp, vp, token_tbl, q_pos,
+                                           exp_mode="lut")
+    ker = paged_attention_varlen(q, kp, vp, token_tbl, q_pos,
+                                 exp_mode="lut", interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_varlen_int8_pool_close_to_float(rng):
+    """INT8 pools (per-row scales, dequantised per page block) track the
+    float varlen path within quantisation error, reference and kernel."""
+    lanes, hq, hkv, d, ps, p = 3, 4, 2, 32, 8, 4
+    n = p * lanes + 1
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu, lane_tbl, lens, _ = make_stream(
+        rng, lanes=lanes, hq=hq, d=d, ps=ps, p=p, n=n)
+
+    def quant(pool):
+        qv, s = quantize_kv_rows(pool.reshape(1, n * hkv, ps, d))
+        return qv.reshape(n, hkv, ps, d), s.reshape(n, hkv, ps)
+
+    kq, ks = quant(kp)
+    vq, vs = quant(vp)
+    want = np.asarray(paged_attention_varlen_reference(
+        q, kp, vp, token_tbl, q_pos))
+    for impl in (paged_attention_varlen_reference,
+                 lambda *a, **kw: paged_attention_varlen(*a, **kw,
+                                                         interpret=True)):
+        got = np.asarray(impl(q, kq, vq, token_tbl, q_pos,
+                              k_scale=ks, v_scale=vs))
+        rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+        assert rel < 0.02, rel
+
+
+def test_varlen_window_and_softcap(rng):
+    """Sliding-window + logit-softcap masking agree with the naive oracle
+    per token — local-attention layers ride the same packed stream."""
+    lanes, hq, hkv, d, ps, p = 2, 4, 2, 16, 8, 4
+    n = p * lanes
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu, lane_tbl, lens, _ = make_stream(
+        rng, lanes=lanes, hq=hq, d=d, ps=ps, p=p, n=n)
+    kw = dict(window=7, cap=15.0)
+
+    got = np.asarray(paged_attention_varlen_reference(
+        q, kp, vp, token_tbl, q_pos, **kw))
+    want = contiguous_oracle("naive", q, cu, lane_tbl, lens, kp, vp, **kw)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+def test_varlen_positions_helper():
+    """varlen_positions: each lane segment ends at its live length − 1 —
+    the packed restatement of the padded per-row bound kv_len − Lq + i."""
+    cu = np.array([0, 3, 4, 8], np.int32)
+    lens = np.array([10, 1, 6], np.int32)
+    pos = varlen_positions(cu, lens)
+    np.testing.assert_array_equal(pos, [7, 8, 9, 0, 2, 3, 4, 5])
+
+
+def test_dead_rows_are_isolated(rng):
+    """Bucket-padding rows (all-scratch table, q_pos 0) change nothing for
+    live tokens and emit finite garbage themselves."""
+    lanes, hq, hkv, d, ps, p = 2, 4, 2, 16, 8, 3
+    n = p * lanes + 1
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu, _, _, _ = make_stream(
+        rng, lanes=lanes, hq=hq, d=d, ps=ps, p=p, n=n)
+    t = q.shape[0]
+    live = np.asarray(paged_attention_varlen_reference(
+        q, kp, vp, token_tbl, q_pos))
+
+    pad = 3
+    scratch = n - 1
+    q2 = jnp.concatenate([q, jnp.asarray(
+        rng.normal(size=(pad, hq, d)).astype(np.float32))])
+    tbl2 = jnp.concatenate([token_tbl, jnp.full((pad, token_tbl.shape[1]),
+                                                scratch, jnp.int32)])
+    pos2 = jnp.concatenate([q_pos, jnp.zeros((pad,), jnp.int32)])
+    both = np.asarray(paged_attention_varlen_reference(
+        q2, kp, vp, tbl2, pos2))
+    np.testing.assert_allclose(both[:t], live, atol=0, rtol=0)
+    assert np.isfinite(both[t:]).all()
+
+
+# --------------------------------------------------------------- registry --
+
+def _call(**kw):
+    base = dict(lq=8, lkv=8, platform="cpu", static_lengths=False,
+                has_kv_pos=False, inside_shard_map=False,
+                has_page_table=True, is_ragged=True)
+    base.update(kw)
+    return AttentionCall(**base)
+
+
+def test_resolution_ragged_calls_only_reach_paged_varlen():
+    assert resolve_backend("auto", _call()).name == "paged_varlen"
+    # the padded-paged backend and every contiguous backend refuse ragged
+    for name in ("paged", "naive", "naive_decode", "jnp", "pallas"):
+        with pytest.raises(ValueError, match="does not support"):
+            resolve_backend(name, _call())
+    # and the ragged backend refuses non-ragged calls
+    for call in (_call(is_ragged=False),
+                 _call(has_page_table=False, is_ragged=False)):
+        with pytest.raises(ValueError, match="does not support"):
+            resolve_backend("paged_varlen", call)
+    # padded paged calls keep resolving to "paged", never the varlen path
+    assert resolve_backend("auto", _call(is_ragged=False)).name == "paged"
+
+
+def test_ragged_via_attention_api(rng):
+    """attention(page_table=…, q_pos=…) resolves to paged_varlen and
+    matches calling the varlen kernel module directly."""
+    lanes, hq, hkv, d, ps, p = 2, 4, 2, 16, 8, 3
+    n = 8
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu, _, _, _ = make_stream(
+        rng, lanes=lanes, hq=hq, d=d, ps=ps, p=p, n=n)
+
+    packed = jnp.moveaxis(q, 0, 1)[None]               # (1, Hq, T, D)
+    via_api = attention(packed, kp, vp, backend="auto", causal=True,
+                        page_table=token_tbl, q_pos=q_pos)
+    direct = paged_attention_varlen(q, kp, vp, token_tbl, q_pos)
+    np.testing.assert_allclose(
+        np.asarray(via_api[0]), np.asarray(jnp.moveaxis(direct, 0, 1)),
+        atol=0, rtol=0)
