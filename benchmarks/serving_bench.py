@@ -1,6 +1,6 @@
-"""Serving benchmarks: engines, the in-place decode A/B, and prefill TTFT.
+"""Serving benchmarks: engines, decode A/B, prefill TTFT, prefix reuse.
 
-Four families, all emitted as CSV rows (``benchmarks.run``) *and* as a
+Five families, all emitted as CSV rows (``benchmarks.run``) *and* as a
 machine-readable ``BENCH_serving.json`` so the perf trajectory is tracked
 across PRs:
 
@@ -35,6 +35,17 @@ across PRs:
    scatter path pays a fresh XLA compile per length while chunking's
    static shapes stay warm — and once more at a repeated (warm) length.
    Each arm is tagged ``prefill_mode: chunked|scatter``.
+
+4. **Prefix reuse** — the shared-system-prompt workload: N requests open
+   with the same page-aligned prefix and differ only in their tails.  The
+   first request prefills cold and publishes its full pages into the radix
+   prefix cache; every later admission is granted those resident pages and
+   streams only its tail.  Measured at equal memory on one engine: cold
+   TTFT (the first shared-prefix request, compile-warm) vs warm TTFT (the
+   rest), with exact `prefix_hit_rate` (hit tokens / known tokens over the
+   warm phase — deterministic, not a timing), `pages_shared` grants and
+   CoW-copy counts from the cache's own telemetry.  The nightly CI job
+   asserts `prefix_hit_rate ≥ 0.9` and warm-over-cold TTFT speedup > 1.
 
 CPU numbers are relative A/B signals, not TPU claims (docs/benchmarks.md).
 """
@@ -440,6 +451,83 @@ def _prefill_results(tiny: bool) -> Dict[str, Any]:
                 / arms["chunked"]["ttft_ms_warm"]}
 
 
+# ------------------------------------------------------------ prefix reuse --
+
+def _prefix_reuse_results(tiny: bool) -> Dict[str, Any]:
+    """Shared-system-prompt TTFT: cold prefill vs radix-cache hits.
+
+    One engine, equal memory, the production-redundant stream: every
+    request opens with the same S-token page-aligned prefix (S multiple of
+    page_size, so hits are whole shared pages and no CoW lands on this
+    path) plus a short distinct tail.  A disjoint-prefix warm-up request
+    retires the one-time step compiles first, so the cold arm measures
+    compute, not XLA; the cache is on throughout, making cold-vs-warm a
+    pure reuse delta.  ``prefix_hit_rate`` is the *deterministic* fraction
+    of warm-phase known tokens served from resident pages (S / (S+tail) by
+    construction) — CI asserts it ≥ 0.9; the TTFT speedup is the wall-clock
+    claim (> 1: a warm request streams ~tail tokens instead of S+tail).
+    """
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import EngineCore, Request
+
+    page = 8 if tiny else 16
+    shared_len = (6 if tiny else 16) * page       # 48 / 256 tokens
+    tail_len = 4 if tiny else 16                  # hit_rate 0.923 / 0.941
+    n_warm = 5 if tiny else 10
+    chunk = 2 * page
+    max_new = 4
+    cfg = get_config("deepseek-7b-smoke")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    need = shared_len + tail_len + max_new
+    num_pages = 2 * -(-need // page) + 4          # requests + resident cache
+
+    eng = EngineCore(cfg, params, lanes=2, page_size=page,
+                     num_pages=num_pages, chunk_size=chunk,
+                     max_len=num_pages * page, prefix_cache=True)
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab_size, shared_len).astype(np.int32)
+
+    def ttft(uid, prompt):
+        t0 = time.perf_counter()
+        eng.submit(Request(uid=uid, prompt=prompt, max_new=max_new))
+        while eng.scheduler.has_work():
+            if eng.step().tokens:
+                break
+        ms = (time.perf_counter() - t0) * 1e3
+        eng.run()                                 # drain tail, publish pages
+        eng.finished.clear()
+        return ms
+
+    def prompt_for(uid):                          # distinct first tail token
+        tail = rng.integers(0, cfg.vocab_size, tail_len).astype(np.int32)
+        tail[0] = uid % cfg.vocab_size
+        return np.concatenate([shared, tail])
+
+    # compile warm-up on a *disjoint* prefix: same lengths, zero reuse
+    ttft(10_000, rng.integers(0, cfg.vocab_size,
+                              shared_len + tail_len).astype(np.int32))
+    cold_ms = ttft(0, prompt_for(0))              # first sharer: cache miss
+    h0, l0 = eng.prefix_cache.hit_tokens, eng.prefix_cache.lookup_tokens
+    warm_ms = [ttft(uid, prompt_for(uid)) for uid in range(1, 1 + n_warm)]
+    stats = eng.prefix_stats
+    warm_known = stats["lookup_tokens"] - l0
+    hit_rate = (stats["hit_tokens"] - h0) / max(warm_known, 1)
+
+    return {"page_size": page, "chunk_size": chunk, "num_pages": num_pages,
+            "shared_prefix_tokens": int(shared_len),
+            "tail_tokens": int(tail_len), "warm_requests": n_warm,
+            "cold_ttft_ms": cold_ms, "warm_ttft_ms": warm_ms,
+            "warm_ttft_ms_median": _pct(warm_ms, 50),
+            "ttft_speedup_warm_vs_cold": cold_ms / _pct(warm_ms, 50),
+            "prefix_hit_rate": hit_rate,
+            "prefix_hit_tokens": int(stats["hit_tokens"] - h0),
+            "pages_shared": int(stats["shared_page_grants"]),
+            "cached_pages": int(stats["cached_pages"]),
+            "cow_copies": int(stats["cow_copies"]),
+            "evicted_pages": int(stats["evicted_pages"])}
+
+
 # ----------------------------------------------------------------- driver --
 
 def run_serving(tiny: bool = False) -> Dict[str, Any]:
@@ -447,7 +535,8 @@ def run_serving(tiny: bool = False) -> Dict[str, Any]:
                      "config": "deepseek-7b-smoke"},
             "engines": _engine_results(tiny),
             "step_breakdown": _breakdown_results(tiny),
-            "prefill_ttft": _prefill_results(tiny)}
+            "prefill_ttft": _prefill_results(tiny),
+            "prefix_reuse": _prefix_reuse_results(tiny)}
 
 
 def write_json(results: Dict[str, Any], path: str = _JSON_DEFAULT) -> None:
@@ -459,6 +548,7 @@ def write_json(results: Dict[str, Any], path: str = _JSON_DEFAULT) -> None:
 def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
     e, bd = results["engines"], results["step_breakdown"]
     pf = results["prefill_ttft"]
+    px = results["prefix_reuse"]
     yield ("serving/slot_contiguous_tok_s", e["slot"]["tok_s"],
            f"{e['slot']['tokens']} toks; {e['slot']['lanes']} lanes x "
            f"{e['max_len']} rows = budget")
@@ -514,6 +604,21 @@ def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
            "chunked vs scatter on all-distinct prompt lengths")
     yield ("serving/ttft_speedup_warm", pf["ttft_speedup_warm"],
            "chunked vs scatter at a repeated (pre-compiled) length")
+    yield ("serving/prefix_cold_ttft_ms", px["cold_ttft_ms"],
+           f"first shared-prefix request ({px['shared_prefix_tokens']}+"
+           f"{px['tail_tokens']} tokens), compile-warm, cache miss")
+    yield ("serving/prefix_warm_ttft_ms", px["warm_ttft_ms_median"],
+           f"median of {px['warm_requests']} cache-hit requests "
+           f"(stream only the {px['tail_tokens']}-token tail)")
+    yield ("serving/prefix_ttft_speedup", px["ttft_speedup_warm_vs_cold"],
+           "warm vs cold TTFT on the shared-prefix workload, same engine")
+    yield ("serving/prefix_hit_rate", px["prefix_hit_rate"],
+           f"warm-phase known tokens served from resident pages "
+           f"({px['prefix_hit_tokens']} hit; deterministic)")
+    yield ("serving/prefix_pages_shared", float(px["pages_shared"]),
+           f"shared-page grants across admissions "
+           f"({px['cached_pages']} pages resident in the radix cache, "
+           f"{px['cow_copies']} CoW copies)")
 
 
 def bench_paged_serving() -> Iterator[Row]:

@@ -27,6 +27,10 @@ def main():
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix KV reuse: requests open with a "
+                         "common system prefix, served from the radix cache "
+                         "after the first")
     ap.add_argument("--slot", action="store_true",
                     help="force the slot-contiguous engine (required for "
                          "SSM-state caches, e.g. falcon-mamba-7b-smoke)")
@@ -44,8 +48,11 @@ def main():
             engine = EngineCore(
                 cfg, params, lanes=args.lanes, page_size=args.page_size,
                 num_pages=args.lanes * -(-args.max_len // args.page_size),
-                chunk_size=args.chunk_size, max_len=args.max_len)
+                chunk_size=args.chunk_size, max_len=args.max_len,
+                prefix_cache=args.prefix_cache)
             kind = f"EngineCore paged/chunked(c={args.chunk_size})"
+            if args.prefix_cache:
+                kind += "+prefix-cache"
         except UnsupportedCacheLayout as e:
             # ring/SSM layouts, or a family with no paged chunk step
             # (e.g. encdec) — the slot engine serves both.
@@ -55,11 +62,17 @@ def main():
             kind = "slot-contiguous (fallback)"
 
     rng = np.random.default_rng(0)
+    # With --prefix-cache, every request opens with the same "system prompt"
+    # — after the first finishes, later admissions reuse its resident pages.
+    shared = (rng.integers(0, cfg.vocab_size,
+                           3 * args.page_size).astype(np.int32)
+              if args.prefix_cache else np.zeros(0, np.int32))
     for i in range(args.requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 24))).astype(np.int32)
         engine.submit(Request(
             uid=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                int(rng.integers(4, 24))).astype(np.int32),
+            prompt=np.concatenate([shared, tail]),
             max_new=int(rng.integers(4, 16)),
             temperature=0.0 if i % 2 == 0 else 0.7))
 
@@ -70,6 +83,13 @@ def main():
     print(f"{cfg.name} [{kind}]: served {len(done)} requests / {n_tok} "
           f"tokens on {args.lanes} lanes in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s, CPU)")
+    stats = getattr(engine, "prefix_stats", {})
+    if stats:
+        print(f"  prefix cache: {stats['hit_tokens']} of "
+              f"{stats['lookup_tokens']} known tokens served from cache "
+              f"(hit_rate {stats['hit_rate']:.3f}), "
+              f"{stats['cached_pages']} pages resident, "
+              f"{stats['cow_copies']} CoW copies")
     for r in sorted(done, key=lambda r: r.uid)[:6]:
         mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
         print(f"  req {r.uid:2d} ({mode:7s}, prompt {len(r.prompt):2d}): "

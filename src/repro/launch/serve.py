@@ -31,6 +31,12 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable shared-prefix KV reuse (radix cache + "
+                         "copy-on-write page sharing)")
+    ap.add_argument("--cache-pages", type=int, default=None,
+                    help="cap on resident prefix-cache pages (default: "
+                         "bounded only by the pool, reclaimed LRU-first)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -50,8 +56,11 @@ def main() -> None:
         eng = EngineCore(cfg, params, lanes=args.lanes,
                          page_size=args.page_size,
                          num_pages=args.lanes * pages_per_lane,
-                         chunk_size=args.chunk_size, max_len=args.max_len)
-        print(f"engine: EngineCore (paged, chunk={args.chunk_size})")
+                         chunk_size=args.chunk_size, max_len=args.max_len,
+                         prefix_cache=args.prefix_cache,
+                         cache_pages=args.cache_pages)
+        print(f"engine: EngineCore (paged, chunk={args.chunk_size}, "
+              f"prefix_cache={'on' if args.prefix_cache else 'off'})")
     except UnsupportedCacheLayout as e:
         print(f"engine: ServingEngine (slot-contiguous) — {e}")
         eng = ServingEngine(cfg, params, slots=args.lanes,
@@ -70,6 +79,12 @@ def main() -> None:
     n_tok = sum(len(r.tokens) for r in done)
     print(f"served {len(done)} requests, {n_tok} tokens "
           f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
+    stats = getattr(eng, "prefix_stats", {})
+    if stats:
+        print(f"prefix cache: hit_rate {stats['hit_rate']:.3f} "
+              f"({stats['hit_tokens']} of {stats['lookup_tokens']} known "
+              f"tokens), {stats['cached_pages']} pages cached, "
+              f"{stats['cow_copies']} CoW copies")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.tokens[:12]}")
 

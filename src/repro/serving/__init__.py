@@ -3,9 +3,11 @@ from repro.serving.api import (Request, RequestState, StepOutput,
 from repro.serving.core import EngineCore
 from repro.serving.engine import PagedServingEngine, ServingEngine
 from repro.serving.paged import PagedKVCache
+from repro.serving.prefix_cache import PrefixHit, RadixPrefixCache
 from repro.serving.scheduler import (RaggedBatch, Scheduler,
                                      default_token_buckets)
 
-__all__ = ["EngineCore", "PagedKVCache", "PagedServingEngine", "RaggedBatch",
-           "Request", "RequestState", "Scheduler", "ServingEngine",
-           "StepOutput", "UnsupportedCacheLayout", "default_token_buckets"]
+__all__ = ["EngineCore", "PagedKVCache", "PagedServingEngine", "PrefixHit",
+           "RadixPrefixCache", "RaggedBatch", "Request", "RequestState",
+           "Scheduler", "ServingEngine", "StepOutput",
+           "UnsupportedCacheLayout", "default_token_buckets"]

@@ -78,6 +78,10 @@ class StepOutput:
     # efficiency; the bench aggregates it per run.
     live_rows: int = 0
     padded_rows: int = 0
+    # Prefix-cache accounting: known tokens granted from resident shared
+    # pages at this step's admissions — rows the engine will never stream
+    # because their KV already sits in the pool (0 with the cache off).
+    prefix_hit_tokens: int = 0
 
     @property
     def mixed(self) -> bool:

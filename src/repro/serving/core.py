@@ -50,6 +50,7 @@ from repro.models import build_model
 from repro.serving.api import (Request, RequestState, StepOutput,
                                UnsupportedCacheLayout)
 from repro.serving.paged import PagedKVCache
+from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.scheduler import Scheduler
 
 
@@ -95,7 +96,9 @@ class EngineCore:
                  page_size: int = 16, num_pages: int = 64,
                  chunk_size: int = 16, max_len: Optional[int] = None,
                  step_tokens: Optional[int] = None, mode: str = "ragged",
-                 token_buckets: Optional[Any] = None, seed: int = 0):
+                 token_buckets: Optional[Any] = None,
+                 prefix_cache: bool = False,
+                 cache_pages: Optional[int] = None, seed: int = 0):
         if mode not in ("ragged", "padded"):
             raise ValueError(f"unknown EngineCore mode {mode!r}; "
                              f"expected 'ragged' or 'padded'")
@@ -113,10 +116,18 @@ class EngineCore:
         self.lanes = lanes
         self.max_len = max_len or num_pages * page_size
         self.kv = PagedKVCache(self.model, num_pages, page_size)
+        # Shared-prefix KV reuse (opt-in): admission probes a radix cache of
+        # page-aligned token blocks and grants resident pages for the hit
+        # prefix; chunked prefill then starts at the first cold token.
+        # Token streams are identical with the cache on or off (the prefix
+        # pages hold the exact KV the skipped chunks would have written).
+        self.prefix_cache = (RadixPrefixCache(self.kv, max_pages=cache_pages)
+                             if prefix_cache else None)
         self.scheduler = Scheduler(self.kv, lanes=lanes,
                                    chunk_size=chunk_size,
                                    step_tokens=step_tokens,
-                                   token_buckets=token_buckets)
+                                   token_buckets=token_buckets,
+                                   prefix_cache=self.prefix_cache)
         self.chunk_size = chunk_size
         self.key = jax.random.PRNGKey(seed)
         self.finished: List[Request] = []
@@ -191,8 +202,10 @@ class EngineCore:
     def _run_block(self, plans, preempted) -> StepOutput:
         """Execute lane plans as one right-aligned (lanes, C) block."""
         if not plans:
-            return StepOutput(tokens={}, finished=(), preempted=preempted,
-                              lanes=0, prefill_tokens=0, decode_tokens=0)
+            return StepOutput(
+                tokens={}, finished=(), preempted=preempted, lanes=0,
+                prefill_tokens=0, decode_tokens=0,
+                prefix_hit_tokens=self.scheduler.prefix_hit_tokens_step)
         c = 1 if all(p.q_len == 1 for p in plans) else self.chunk_size
         width = max(len(p.run.pages) for p in plans)
         width = 1 << max(width - 1, 0).bit_length()    # retrace bucketing
@@ -219,8 +232,10 @@ class EngineCore:
         """Execute a RaggedBatch as one packed token stream."""
         plans = batch.plans
         if not plans:
-            return StepOutput(tokens={}, finished=(), preempted=preempted,
-                              lanes=0, prefill_tokens=0, decode_tokens=0)
+            return StepOutput(
+                tokens={}, finished=(), preempted=preempted, lanes=0,
+                prefill_tokens=0, decode_tokens=0,
+                prefix_hit_tokens=self.scheduler.prefix_hit_tokens_step)
         # Stream index of each plan's final token; idle tail lanes point at
         # row 0 (their logits are computed but never read — the (lanes, V)
         # output shape stays static across schedules).
@@ -264,7 +279,9 @@ class EngineCore:
         return StepOutput(tokens=out_tokens, finished=tuple(finished),
                           preempted=preempted, lanes=len(plans),
                           prefill_tokens=n_prefill, decode_tokens=n_decode,
-                          live_rows=live, padded_rows=padded)
+                          live_rows=live, padded_rows=padded,
+                          prefix_hit_tokens=(
+                              self.scheduler.prefix_hit_tokens_step))
 
     def run(self, max_steps: int = 100_000) -> List[Request]:
         steps = 0
@@ -279,6 +296,11 @@ class EngineCore:
     @property
     def pages_in_use(self) -> int:
         return self.kv.num_pages - len(self.kv.free)
+
+    @property
+    def prefix_stats(self) -> dict:
+        """Prefix-cache telemetry (empty dict when the cache is off)."""
+        return self.prefix_cache.stats() if self.prefix_cache else {}
 
     @property
     def page_tables(self) -> List[List[int]]:

@@ -205,14 +205,16 @@ class PagedServingEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
                  page_size: int = 16, num_pages: int = 64,
                  max_len: Optional[int] = None, seed: int = 0,
-                 chunk_size: Optional[int] = None):
+                 chunk_size: Optional[int] = None,
+                 prefix_cache: bool = False):
         warnings.warn(
             "PagedServingEngine is deprecated: build repro.serving.EngineCore"
             " directly (same constructor, request-level step API)",
             DeprecationWarning, stacklevel=2)
         self.core = EngineCore(cfg, params, lanes=slots, page_size=page_size,
                                num_pages=num_pages, max_len=max_len,
-                               seed=seed, chunk_size=chunk_size or page_size)
+                               seed=seed, chunk_size=chunk_size or page_size,
+                               prefix_cache=prefix_cache)
         self.cfg = cfg
         self.slots = slots
 

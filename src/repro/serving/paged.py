@@ -22,6 +22,18 @@ Mechanics
   physical pages.  Allocation is lazy — a page is taken only as a sequence's
   rows actually reach it — and the scheduler preempts-by-eviction when the
   pool runs dry, so there is no up-front worst-case reservation.
+- Every physical page carries a **refcount**: one per page-table that names
+  it, plus one when the prefix cache (``serving/prefix_cache.py``) holds it.
+  ``alloc`` hands out exclusive pages (ref 1), ``share`` adds a reference
+  (a prefix-cache hit granting resident pages to a new request), and
+  ``release`` only returns a page to the free heap when its last reference
+  drops — evicting one request can never free another request's shared
+  prefix, and the free heap never contains a referenced page.  Writing into
+  a *shared* page goes through ``cow``: the writer gets a fresh copy
+  (copy-on-write) and drops its reference on the original, so the cached
+  prefix stays immutable.  When the heap runs dry, ``alloc`` reclaims
+  least-recently-used *unreferenced* cached pages through the attached
+  prefix cache before the scheduler ever has to preempt a live request.
 - This module never touches jax compute: the engine hands ``(pool,
   page_table, kv_len, q_len)`` straight to the model's unified paged step,
   which reads pages in place and writes each live row at its (physical
@@ -137,6 +149,13 @@ class PagedKVCache:
         self.pool = model.init_cache(num_pages + 1, page_size)
         self.axes = cache_batch_axes(self.pool)   # page id plays batch here
         self.free: List[int] = list(range(num_pages))   # min-heap by page id
+        # References per physical page: one per page-table naming it, plus
+        # one while the prefix cache holds it.  The scratch page is outside
+        # the refcount world entirely (never allocated, shared or freed).
+        self.ref: List[int] = [0] * num_pages
+        self.cow_copies = 0                         # lifetime CoW page copies
+        self._cache = None                          # RadixPrefixCache, if any
+        self._copy_fn = None                        # lazy jitted page copy
 
     # ------------------------------------------------------------ free list
     def pages_needed(self, tokens: int) -> int:
@@ -146,16 +165,80 @@ class PagedKVCache:
     def free_pages(self) -> int:
         return len(self.free)
 
+    @property
+    def available_pages(self) -> int:
+        """Pages an ``alloc`` can obtain without preempting anyone: the free
+        heap plus cached pages no request references (reclaimed LRU-first
+        through the attached prefix cache)."""
+        extra = self._cache.reclaimable_pages if self._cache is not None else 0
+        return len(self.free) + extra
+
+    def attach_cache(self, cache) -> None:
+        """Wire a prefix cache in as the reclaim source for ``alloc``."""
+        self._cache = cache
+
     def alloc(self) -> int:
         # Lowest id first (not LIFO): page ids stay dense at the bottom of
         # the pool for locality, and allocation order is deterministic under
         # any release order — tests can predict physical layout.  The
-        # scheduler checks ``free_pages`` (and preempts) before popping.
-        return heapq.heappop(self.free)
+        # scheduler checks ``available_pages`` (and preempts) before popping;
+        # when the heap itself is dry, unreferenced cached prefix pages are
+        # reclaimed LRU-first to refill it.
+        while not self.free:
+            if self._cache is None or not self._cache.evict_one():
+                raise RuntimeError(
+                    "page pool exhausted: no free or reclaimable pages "
+                    "(scheduler must check available_pages before alloc)")
+        p = heapq.heappop(self.free)
+        self.ref[p] = 1
+        return p
+
+    def share(self, page: int) -> None:
+        """Add a reference to a resident page (cache hold / cache-hit grant).
+        Only live pages can be shared — a page on the free heap has no
+        content to share."""
+        if self.ref[page] <= 0:
+            raise ValueError(f"share of unreferenced page {page}")
+        self.ref[page] += 1
+
+    def release_one(self, page: int) -> None:
+        """Drop one reference; the page returns to the free heap only when
+        the *last* reference drops — a shared prefix survives any one
+        holder's eviction, and the heap never sees a referenced page."""
+        if self.ref[page] <= 0:
+            raise ValueError(f"double release of page {page}")
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            heapq.heappush(self.free, page)
 
     def release(self, pages: List[int]) -> None:
         for p in pages:
-            heapq.heappush(self.free, p)
+            self.release_one(p)
+
+    def cow(self, page: int) -> int:
+        """Copy-on-write: make ``page`` writable for one holder.
+
+        Exclusive pages (ref 1) are returned as-is — writing in place is
+        safe.  Shared pages are copied leaf-by-leaf into a freshly allocated
+        page (the caller must have checked ``available_pages``); the
+        caller's reference moves to the copy and the original — typically a
+        prefix-cache page whose tail rows a new request is about to
+        overwrite — stays immutable for its other holders.
+        """
+        if self.ref[page] <= 1:
+            return page
+        fresh = self.alloc()
+        if self._copy_fn is None:
+            def copy_page(pool, src, dst):
+                def one(leaf, ax):
+                    idx = (slice(None),) * ax
+                    return leaf.at[idx + (dst,)].set(leaf[idx + (src,)])
+                return jax.tree.map(one, pool, self.axes)
+            self._copy_fn = jax.jit(copy_page, donate_argnums=(0,))
+        self.pool = self._copy_fn(self.pool, jnp.int32(page), jnp.int32(fresh))
+        self.release_one(page)
+        self.cow_copies += 1
+        return fresh
 
     # ------------------------------------------------------------- pool ops
     def gather(self, pool: Pytree, tbl: jax.Array) -> Pytree:

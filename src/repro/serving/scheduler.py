@@ -22,10 +22,22 @@ Policy
   then prefill lanes split the remaining budget into chunks, oldest first.
 - **Preemption by eviction**: pages are granted in strict ticket order; when
   the pool runs dry the *youngest* resident request is evicted — its pages
-  return to the free list, its cursor rewinds to zero, and it re-enters the
-  waiting queue (by its original ticket) to be replayed later.  The oldest
-  resident request can always evict its way to the whole pool, so progress
-  is guaranteed as long as any single request fits (checked at submit).
+  are released (refcount-aware: a page another request or the prefix cache
+  still references survives the eviction — only its exclusive pages reach
+  the free heap), its cursor rewinds to zero, and it re-enters the waiting
+  queue (by its original ticket) to be replayed later.  The oldest resident
+  request can always evict its way to the whole pool, so progress is
+  guaranteed as long as any single request fits (checked at submit).
+- **Prefix reuse** (optional ``prefix_cache``): admission probes the radix
+  cache with the request's known tokens; the hit prefix's resident pages
+  are *granted shared* and the cursor starts at the first cold token, so
+  chunked prefill streams only what the cache misses.  Full pages are
+  published back into the cache on completion *and* on eviction (an evicted
+  request usually resumes by cache hit instead of recompute), and a grant
+  into the middle of a cached page is copy-on-written before the request's
+  first cold row lands in it.  All pool arithmetic uses ``available_pages``
+  — free heap plus reclaimable cached pages — so a full cache never causes
+  a preemption an empty one would not.
 
 Two packings of the same plan
 -----------------------------
@@ -56,6 +68,7 @@ import numpy as np
 
 from repro.serving.api import Request, RequestState
 from repro.serving.paged import PagedKVCache
+from repro.serving.prefix_cache import RadixPrefixCache
 
 
 def default_token_buckets(max_tokens: int) -> Tuple[int, ...]:
@@ -86,6 +99,11 @@ class RunningRequest:
     ticket: int
     pages: List[int] = dataclasses.field(default_factory=list)
     rows: int = 0                     # KV rows already resident
+    # memoized admission probe: (cache.version, PrefixHit) — a blocked
+    # head-of-queue request is re-considered every schedule, but its match
+    # cannot change until the tree does (or its own tokens do: cleared on
+    # eviction, where replayed generation grows the known stream)
+    probe: Optional[tuple] = None
 
     def known(self) -> int:
         return len(self.req.prompt) + len(self.req.tokens)
@@ -147,9 +165,11 @@ class Scheduler:
     def __init__(self, kv: PagedKVCache, *, lanes: int = 4,
                  chunk_size: int = 16,
                  step_tokens: Optional[int] = None,
-                 token_buckets: Optional[Sequence[int]] = None):
+                 token_buckets: Optional[Sequence[int]] = None,
+                 prefix_cache: Optional[RadixPrefixCache] = None):
         assert chunk_size >= 1
         self.kv = kv
+        self.cache = prefix_cache
         self.lanes = lanes
         self.chunk_size = chunk_size
         # Fairness knob: max tokens per step across all lanes.  The default
@@ -169,6 +189,7 @@ class Scheduler:
         self._ticket = 0
         self.preempted_count = 0                    # evictions, lifetime
         self._evicted_now: List[int] = []           # within one schedule()
+        self.prefix_hit_tokens_step = 0             # granted this schedule()
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, req: Request) -> None:
@@ -187,42 +208,99 @@ class Scheduler:
         self._ticket += 1
 
     def finish(self, run: RunningRequest) -> None:
-        """Release a completed request's lane and pages."""
+        """Release a completed request's lane and pages, publishing its full
+        prefix pages into the prefix cache first (they stay resident for
+        future hits; only its trailing partial page frees outright)."""
         self.running.remove(run)
+        self._publish(run)
         self.kv.release(run.pages)
         run.pages = []
         run.req.state = RequestState.FINISHED
+        if self.cache is not None:
+            self.cache.enforce_budget()
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
     # ------------------------------------------------------------- internal
+    def _publish(self, run: RunningRequest) -> None:
+        """Publish ``run``'s full resident pages into the prefix cache,
+        keyed by the tokens whose KV rows they hold."""
+        if self.cache is None or run.rows < self.kv.page_size:
+            return
+        self.cache.insert(run.req.known_tokens()[:run.rows], run.pages)
+
     def _preempt_youngest(self, older_than: int) -> bool:
         """Evict the youngest resident request with ticket > ``older_than``;
         its cursor rewinds and it re-queues by ticket (recompute preemption).
-        → False when no such victim exists."""
+        Its full pages are published to the prefix cache first — still
+        reclaimable under pressure, but if they survive, the victim resumes
+        by cache hit instead of recompute — and the release is
+        refcount-aware: pages the cache or another request still references
+        are never freed by this eviction.  → False when no victim exists."""
         victims = [r for r in self.running if r.ticket > older_than]
         if not victims:
             return False
         victim = max(victims, key=lambda r: r.ticket)
         self.running.remove(victim)
+        self._publish(victim)
         self.kv.release(victim.pages)
         victim.pages = []
         victim.rows = 0
+        victim.probe = None               # known tokens grew: stale match
         victim.req.state = RequestState.PREEMPTED
         self.preempted_count += 1
         self._evicted_now.append(victim.req.uid)
         bisect.insort(self.waiting, victim, key=lambda r: r.ticket)
+        if self.cache is not None:
+            self.cache.enforce_budget()
         return True
+
+    def _cow_credit(self, page: int) -> bool:
+        """True when copy-on-writing ``page`` hands its original straight
+        back to the reclaimable pool: the only other holder is the cache,
+        so the writer's release leaves it cache-only."""
+        return (self.kv.ref[page] == 2 and self.cache is not None
+                and self.cache.holds(page))
 
     def _grant_pages(self, run: RunningRequest, rows_after: int) -> bool:
         """Extend ``run``'s page table to cover ``rows_after`` rows, evicting
-        younger residents if the free list runs dry.  → False if ``run``
-        itself lost the fight (only ever happens to non-oldest requests)."""
+        younger residents if the pool runs dry.  Shared pages the coming
+        rows would write into (the partial page of a prefix hit) are
+        copy-on-written here, before the step runs.  The budget counts each
+        copy but *credits* originals whose release returns them to the
+        reclaimable pool (cache-only sharers) — without the credit, a
+        partial-page hit on a pool the workload physically fits would
+        demand a page it is about to give back and wedge the lane forever.
+        → False if ``run`` itself lost the fight (only ever happens to
+        non-oldest requests)."""
+        ps = self.kv.page_size
+        lo = run.rows // ps
+        hi = min((rows_after - 1) // ps + 1, len(run.pages))
         need = self.kv.pages_needed(rows_after) - len(run.pages)
-        while need > self.kv.free_pages:
-            if not self._preempt_youngest(older_than=run.ticket):
-                return False              # run is the youngest: it waits
+        while True:
+            cow = [i for i in range(lo, hi)
+                   if self.kv.ref[run.pages[i]] > 1]
+            credit = sum(1 for i in cow if self._cow_credit(run.pages[i]))
+            avail = self.kv.available_pages
+            # aggregate demand, plus one transient page for the first copy
+            if need + len(cow) - credit <= avail and (not cow or avail >= 1):
+                break
+            if self._preempt_youngest(older_than=run.ticket):
+                continue
+            # No victims left: before wedging the lane, take sole ownership
+            # of a cache-only shared page (leaf eviction, no copy) — the
+            # cache yields exactly like it does for any other reclaim.
+            if self.cache is not None and any(
+                    self.kv.ref[run.pages[i]] == 2
+                    and self.cache.release_hold(run.pages[i]) for i in cow):
+                continue
+            return False                  # run is the youngest: it waits
+        # credit-yielding copies first: each returns its original to the
+        # reclaimable pool before the next copy draws on it, so the
+        # aggregate budget above is also sequentially safe
+        for i in sorted(cow, key=lambda i: not self._cow_credit(run.pages[i])):
+            run.pages[i] = self.kv.cow(run.pages[i])
         for _ in range(need):
             run.pages.append(self.kv.alloc())
         return True
@@ -230,13 +308,38 @@ class Scheduler:
     def _admit(self) -> None:
         while self.waiting and len(self.running) < self.lanes:
             cand = self.waiting[0]
+            # Probe the prefix cache with the candidate's known tokens
+            # (prompt ⊕ replayed generation): a pure match — nothing is
+            # granted until the admission check passes — memoized against
+            # the tree version while the head waits on the pool.
+            hit = None
+            if self.cache is not None:
+                if cand.probe is not None and \
+                        cand.probe[0] == self.cache.version:
+                    hit = cand.probe[1]
+                else:
+                    hit = self.cache.match(cand.req.known_tokens())
+                    cand.probe = (self.cache.version, hit)
             # Admission is against the pool budget for the tokens the
-            # request *has* (prompt ⊕ replayed generation) plus one decode
-            # row; further growth allocates lazily and may preempt.
-            if self.kv.pages_needed(cand.known() + 1) > self.kv.free_pages:
+            # request *has* plus one decode row, minus the pages the hit
+            # already holds resident.  Granting pins the hit's currently
+            # cache-only pages (they stop being reclaimable), so those are
+            # subtracted from the available side.
+            need = self.kv.pages_needed(cand.known() + 1)
+            avail = self.kv.available_pages
+            if hit is not None:
+                need -= len(hit.pages)
+                avail -= sum(1 for p in hit.pages if self.kv.ref[p] == 1)
+            if need > avail:
                 break                     # FCFS: the head blocks the queue
             self.waiting.pop(0)
-            cand.rows = 0
+            if hit is not None:
+                self.cache.grant(hit, cand.known())
+                cand.pages = list(hit.pages)
+                cand.rows = hit.tokens
+                self.prefix_hit_tokens_step += hit.tokens
+            else:
+                cand.rows = 0
             cand.req.state = RequestState.PREFILL
             bisect.insort(self.running, cand, key=lambda r: r.ticket)
 
@@ -283,6 +386,7 @@ class Scheduler:
         per chunk instead of once per token): ``begin_step()`` then exactly
         one of :meth:`plans_for` / :meth:`batch_for`."""
         self._evicted_now = []
+        self.prefix_hit_tokens_step = 0
         self._admit()
         return self._plan_wants()
 

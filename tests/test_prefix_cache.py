@@ -1,0 +1,486 @@
+"""Shared-prefix KV reuse: radix cache + copy-on-write page pool (PR-5 gate).
+
+The contracts this suite pins:
+
+- **Token identity.**  Serving a shared-system-prompt workload through the
+  prefix cache emits exactly the token streams of cold (cache-off) runs —
+  float and int8, ragged and padded packings, across partial-page hits
+  (CoW) and preemption/resume.  The cached pages hold the *same* KV rows
+  the skipped prefill chunks would have written, so nothing downstream can
+  tell the difference.
+- **No prefill work for reused tokens.**  A warm request traces no new step
+  function and streams only its cold tokens: the engine's compile counter
+  stays flat and the per-step row accounting (`live_rows`/`padded_rows`)
+  shows width-1 steps where the cold run streamed whole chunks.
+- **Pool safety.**  Refcounts make sharing safe: the free heap never holds
+  a referenced page, evicting one request never frees another's shared
+  prefix (the double-free regression), CoW isolates writers from the cached
+  original, and arbitrary interleavings of alloc/share/CoW/release/evict —
+  driven through the real scheduler under shared-prefix load — preserve
+  refcounts ≥ 0, free ∩ resident = ∅, lowest-id-first allocation and
+  conservation of total pages.
+- **Radix mechanics.**  Page-aligned block matching with partial-page lcp
+  extension, the known−1 cap (one token always left to sample from), LRU
+  leaf-first eviction, and the `max_pages` budget.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI image without hypothesis: seeded fallback
+    from tests._hypothesis_stub import given, settings, st
+
+from repro.models import build_model
+from repro.serving import (EngineCore, PagedKVCache, RadixPrefixCache,
+                           Request, Scheduler)
+from tests.test_engine_core import build, by_uid, prompts_for
+
+PS = 8   # page size used throughout (matches the smoke pool tests)
+
+
+def drain(eng, max_steps=2000):
+    """Step to empty → (per-uid token streams, outputs); bounded so a
+    scheduling livelock fails the test instead of hanging it."""
+    outs = []
+    while eng.scheduler.has_work():
+        outs.append(eng.step())
+        assert len(outs) < max_steps, "engine did not drain"
+    return by_uid(eng.finished), outs
+
+
+def check_pool(kv: PagedKVCache, cache: RadixPrefixCache = None,
+               running=()) -> None:
+    """The pool invariants every interleaving must preserve."""
+    free = list(kv.free)
+    assert len(set(free)) == len(free), "duplicate page on the free heap"
+    assert all(kv.ref[p] == 0 for p in free), \
+        "free heap holds a referenced page"
+    assert all(r >= 0 for r in kv.ref), "negative refcount"
+    held = sum(1 for r in kv.ref if r > 0)
+    assert len(free) + held == kv.num_pages, "pages leaked or double-freed"
+    if cache is not None:
+        assert all(kv.ref[n.page] >= 1 for n in cache._nodes.values()), \
+            "cached node holds a freed page"
+        assert kv.available_pages == len(free) + cache.reclaimable_pages
+    for run in running:
+        assert all(kv.ref[p] >= 1 for p in run.pages), \
+            "resident request holds a freed page"
+
+
+def checked_alloc(kv: PagedKVCache) -> None:
+    """Wrap ``kv.alloc`` to assert lowest-id-first allocation."""
+    orig = PagedKVCache.alloc
+
+    def alloc():
+        expect = min(kv.free) if kv.free else None
+        page = orig(kv)
+        if expect is not None:
+            assert page == expect, f"alloc {page}, lowest free was {expect}"
+        return page
+
+    kv.alloc = alloc
+
+
+# ------------------------------------------------------------ radix tree --
+
+def _kv_and_cache(num_pages=16, page_size=4, max_pages=None):
+    cfg, _ = build()
+    kv = PagedKVCache(build_model(cfg), num_pages, page_size)
+    return kv, RadixPrefixCache(kv, max_pages=max_pages)
+
+
+def test_radix_match_full_partial_and_cap():
+    """Block-aligned matching: full-page walks, partial-page lcp extension,
+    and the known−1 cap that always leaves one token to stream."""
+    kv, cache = _kv_and_cache(page_size=4)
+    toks = np.arange(100, 110, dtype=np.int32)          # 10 tokens
+    pages = [kv.alloc(), kv.alloc()]                    # rows 0..7 (2 pages)
+    assert cache.insert(toks[:8], pages) == 2
+    kv.release(pages)                                   # cache refs keep them
+
+    full = cache.match(toks)                            # limit 9 → 2 pages
+    assert (full.tokens, full.partial_rows) == (8, 0)
+    assert full.pages == (0, 1)
+
+    part = cache.match(toks[:8])        # limit 7: 1 full + 3-row partial
+    assert (part.tokens, part.partial_rows) == (7, 3)
+    assert part.pages == (0, 1)
+
+    assert cache.match(toks[:5]).tokens == 4            # 1 full, no partial
+    assert cache.match(toks[:2]).tokens == 1            # pure partial
+    assert cache.match(np.array([7, 8, 9, 10, 11], np.int32)).tokens == 0
+
+    # a match is pure: nothing granted, nothing stamped, no stats
+    assert all(kv.ref[p] == 1 for p in (0, 1))
+    assert cache.lookups == 0
+
+    cache.grant(part, total_tokens=8)
+    assert all(kv.ref[p] == 2 for p in (0, 1))
+    assert (cache.hits, cache.hit_tokens, cache.partial_hits) == (1, 7, 1)
+    check_pool(kv, cache)
+
+
+def test_radix_lru_leaf_first_eviction_and_budget():
+    """Eviction reclaims LRU *leaves* only (never stranding descendants),
+    skips request-pinned pages, and ``max_pages`` caps the footprint."""
+    kv, cache = _kv_and_cache(page_size=4)
+    toks = np.arange(50, 62, dtype=np.int32)            # 3 full blocks
+    pages = [kv.alloc() for _ in range(3)]
+    cache.insert(toks, pages)
+    kv.release(pages)
+    assert cache.cached_pages == cache.reclaimable_pages == 3
+
+    # leaf-first: the chain must come back deepest-first, 2 then 1 then 0
+    assert cache.evict_one() and sorted(kv.free)[:1] == [2]
+    assert cache.evict_one() and 1 in kv.free
+
+    # re-publish depth 1, then pin the whole path as a request grant would
+    page1 = kv.alloc()
+    cache.insert(toks[:8], [0, page1])                  # 0 still cached
+    kv.release_one(page1)                               # cache ref keeps it
+    hit = cache.match(toks[:9])
+    assert hit.pages == (0, page1)
+    cache.grant(hit, total_tokens=9)
+    assert cache.reclaimable_pages == 0
+    assert not cache.evict_one()                        # everything pinned
+    for p in hit.pages:
+        kv.release_one(p)
+    assert cache.reclaimable_pages == 2
+
+    # budget: enforce down to 1 resident cached page (LRU leaf goes first)
+    cache.max_pages = 1
+    cache.enforce_budget()
+    assert cache.cached_pages == 1
+    check_pool(kv, cache)
+
+
+def test_pool_primitive_edges():
+    """share/release/cow edge semantics the scheduler relies on."""
+    kv, cache = _kv_and_cache(num_pages=4, page_size=4)
+    p = kv.alloc()
+    assert p == 0 and kv.ref[0] == 1
+    kv.share(p)
+    kv.release_one(p)
+    assert kv.ref[p] == 1 and p not in kv.free          # still referenced
+    kv.release_one(p)
+    assert p in kv.free
+    with pytest.raises(ValueError, match="double release"):
+        kv.release_one(p)
+    with pytest.raises(ValueError, match="share of unreferenced"):
+        kv.share(p)
+
+    q = kv.alloc()
+    assert kv.cow(q) == q                               # exclusive: in place
+    kv.share(q)
+    r = kv.cow(q)                                       # shared: fresh copy
+    assert r != q and kv.ref[q] == 1 and kv.ref[r] == 1
+    assert kv.cow_copies == 1
+    check_pool(kv, cache)
+
+
+# ------------------------------------------------- double-free regression --
+
+def test_eviction_never_frees_shared_prefix_pages():
+    """The double-free regression: two residents share cached prefix pages;
+    evicting one must not free them — the survivor keeps decoding through
+    the shared pages and stays token-identical to its uncontended run."""
+    cfg, params = build()
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, 2 * PS).astype(np.int32)
+    tails = [np.concatenate([[i], rng.integers(0, cfg.vocab_size, 3)])
+             .astype(np.int32) for i in range(3)]
+
+    def engine(num_pages, prefix_cache=True):
+        return EngineCore(cfg, params, lanes=2, page_size=PS,
+                          num_pages=num_pages, chunk_size=PS,
+                          prefix_cache=prefix_cache)
+
+    # uncontended truths (cache off = pure cold compute)
+    want = {}
+    for uid, tail in enumerate(tails):
+        eng = engine(16, prefix_cache=False)
+        eng.submit(Request(uid=uid, prompt=np.concatenate([shared, tail]),
+                           max_new=(14, 14, 4)[uid]))
+        want.update(drain(eng)[0])
+
+    # contended: seed the cache, then two sharers fight over a small pool
+    # (peak distinct demand is 2 shared + 3 + 2 exclusive pages = 7 > 6)
+    eng = engine(6)
+    eng.submit(Request(uid=2, prompt=np.concatenate([shared, tails[2]]),
+                       max_new=4))
+    drain(eng)                                  # publishes the shared prefix
+    eng.submit(Request(uid=0, prompt=np.concatenate([shared, tails[0]]),
+                       max_new=14))
+    eng.submit(Request(uid=1, prompt=np.concatenate([shared, tails[1]]),
+                       max_new=14))
+    preempted = []
+    shared_pages = None
+    while eng.scheduler.has_work():
+        out = eng.step()
+        preempted.extend(out.preempted)
+        runs = {r.req.uid: r for r in eng.scheduler.running}
+        if shared_pages is None and 0 in runs and 1 in runs:
+            a, b = runs[0].pages, runs[1].pages
+            shared_pages = [p for p in a if p in b]
+        if preempted and 0 in runs:
+            # the survivor's pages are all alive, nothing shared was freed
+            assert all(eng.kv.ref[p] >= 1 for p in runs[0].pages)
+            assert not any(p in eng.kv.free for p in runs[0].pages)
+        check_pool(eng.kv, eng.prefix_cache, eng.scheduler.running)
+    assert shared_pages, "the requests never actually shared prefix pages"
+    assert preempted, "pool contention never evicted a sharer"
+    got, _ = drain(eng)
+    assert {u: want[u] for u in got} == got, \
+        "eviction of a sharer corrupted a shared prefix"
+    check_pool(eng.kv, eng.prefix_cache)
+
+
+def test_partial_hit_on_tight_pool_does_not_livelock():
+    """Regression: a partial-page hit whose CoW budget ignored the page the
+    copy gives back would demand pages the pool cannot produce, find no
+    victim (the request is alone), and wedge the lane forever.  The CoW
+    credit must let a workload that physically fits drain — and with the
+    pool *completely* pinned, the cache must yield sole ownership of the
+    shared page rather than starve the lane."""
+    cfg, params = build()
+    rng = np.random.default_rng(2)
+    base = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    follow = np.concatenate(
+        [base[:6], rng.integers(0, cfg.vocab_size, 8)]).astype(np.int32)
+
+    def streams(**kw):
+        # pool of 4 × 4-row pages: follow needs all 4 worst-case
+        eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=4,
+                         chunk_size=16, **kw)
+        eng.submit(Request(uid=0, prompt=base, max_new=1))
+        got, _ = drain(eng)
+        eng.submit(Request(uid=1, prompt=follow, max_new=1))
+        got2, _ = drain(eng)                 # must not wedge (run() bounds)
+        check_pool(eng.kv, eng.prefix_cache)
+        return {**got, **got2}
+
+    assert streams(prefix_cache=True) == streams(prefix_cache=False)
+
+
+# ----------------------------------------------- interleaving properties --
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_pool_invariants_under_shared_prefix_interleavings(seed):
+    """Arbitrary interleavings of alloc / share / CoW / release / evict —
+    generated by driving the real scheduler over a random shared-prefix
+    request stream on a pool far too small for it — preserve the pool
+    invariants at every step: refcounts ≥ 0, free ∩ resident = ∅,
+    lowest-id-first allocation, conservation of total pages, and the
+    available-page accounting the admission path trusts."""
+    from tests.test_engine_core import _sim_engine
+
+    rng = np.random.default_rng(seed)
+    cfg, _ = build()
+    kv = PagedKVCache(build_model(cfg), 10, 4)
+    checked_alloc(kv)
+    cache = RadixPrefixCache(
+        kv, max_pages=int(rng.integers(2, 9)) if rng.random() < 0.5
+        else None)
+    sched = Scheduler(kv, lanes=3, chunk_size=4, prefix_cache=cache)
+
+    # a few base prefixes; most requests extend one of them (radix hits,
+    # shared grants, CoW on the partial pages), some are fresh streams
+    bases = [rng.integers(0, 40, int(rng.integers(4, 14))).astype(np.int32)
+             for _ in range(3)]
+    uid = 0
+    for _ in range(int(rng.integers(4, 9))):
+        if rng.random() < 0.75:
+            base = bases[int(rng.integers(0, len(bases)))]
+            tail = rng.integers(0, 40, int(rng.integers(1, 6)))
+            prompt = np.concatenate([base, tail]).astype(np.int32)
+        else:
+            prompt = rng.integers(0, 40,
+                                  int(rng.integers(1, 16))).astype(np.int32)
+        sched.submit(Request(uid=uid, prompt=prompt,
+                             max_new=int(rng.integers(1, 8))))
+        uid += 1
+
+    steps = 0
+    while sched.has_work():
+        steps += 1
+        assert steps < 2000, "scheduler did not drain"
+        if rng.random() < 0.5:
+            batch, _ = sched.schedule_ragged()
+            plans = batch.plans
+        else:
+            plans, _ = sched.schedule()
+            batch = sched.pack(plans)
+        check_pool(kv, cache, sched.running)
+        if rng.random() < 0.15:                 # pressure from outside too
+            cache.evict_one()
+            check_pool(kv, cache, sched.running)
+        _sim_engine(sched, batch)
+    # drained: every page is either free or held by the cache alone
+    check_pool(kv, cache)
+    assert all(kv.ref[n.page] == 1 for n in cache._nodes.values())
+    assert len(kv.free) + cache.cached_pages == kv.num_pages
+    if cache.max_pages is not None:
+        assert cache.cached_pages <= cache.max_pages
+
+
+# ------------------------------------------------------- token identity --
+
+@pytest.mark.parametrize("mode", ["ragged", "padded"])
+@pytest.mark.parametrize("kv_quant", [False, True])
+def test_shared_prefix_serving_token_identical(kv_quant, mode):
+    """N requests reusing one system prompt: token streams identical to the
+    cold (cache-off) engine, with *exact* ``prefix_hit_tokens`` accounting
+    — the shared prefix is page-aligned, each tail opens with a distinct
+    token, so every warm admission hits exactly the prefix."""
+    cfg, params = build(kv_quant=kv_quant)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, 3 * PS).astype(np.int32)
+    tails = [np.concatenate([[i], rng.integers(0, cfg.vocab_size, n)])
+             .astype(np.int32) for i, n in enumerate((5, 9, 7, 4))]
+    news = (6, 4, 8, 5)
+
+    def serve(prefix_cache):
+        eng = EngineCore(cfg, params, lanes=2, page_size=PS, num_pages=32,
+                         chunk_size=PS, mode=mode, prefix_cache=prefix_cache)
+        # request 0 cold-fills the cache; 1..3 arrive once it published
+        eng.submit(Request(uid=0, prompt=np.concatenate([shared, tails[0]]),
+                           max_new=news[0]))
+        _, outs = drain(eng)
+        for uid in (1, 2, 3):
+            eng.submit(Request(
+                uid=uid, prompt=np.concatenate([shared, tails[uid]]),
+                max_new=news[uid]))
+        _, outs2 = drain(eng)
+        return (by_uid(eng.finished), outs + outs2,
+                eng.prefix_stats.get("hit_tokens", 0))
+
+    want, _, _ = serve(False)
+    got, outs, hit_tokens = serve(True)
+    assert got == want, "cache-hit serving diverged from cold prefill"
+    # exact accounting: three warm admissions × the 24-token shared prefix
+    assert hit_tokens == 3 * len(shared)
+    assert sum(o.prefix_hit_tokens for o in outs) == 3 * len(shared)
+
+
+@pytest.mark.parametrize("mode", ["ragged", "padded"])
+def test_hit_serving_survives_preemption_resume(mode):
+    """Cache on + a pool too small for the offered load: the victim's full
+    pages are published at eviction, its resume admission re-hits them (or
+    recomputes if they were reclaimed), and every stream stays identical
+    to the uncontended runs.  Both packings."""
+    cfg, params = build()
+    specs = [(4, 26), (12, 14)]
+    prompts = prompts_for(cfg, 21, [lp for lp, _ in specs])
+
+    solo = {}
+    for uid, (lp, mn) in enumerate(specs):
+        eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=16,
+                         chunk_size=4, mode=mode)
+        eng.submit(Request(uid=uid, prompt=prompts[uid], max_new=mn))
+        solo[uid] = eng.run()[0].tokens
+
+    eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=8,
+                     chunk_size=4, mode=mode, prefix_cache=True)
+    for uid, (lp, mn) in enumerate(specs):
+        eng.submit(Request(uid=uid, prompt=prompts[uid], max_new=mn))
+    preempted = []
+    while eng.scheduler.has_work():
+        preempted.extend(eng.step().preempted)
+        check_pool(eng.kv, eng.prefix_cache, eng.scheduler.running)
+    assert preempted, "pool contention never triggered an eviction"
+    assert by_uid(eng.finished) == solo, \
+        "preempted request did not resume token-identically under the cache"
+
+
+def test_resume_by_cache_hit():
+    """With headroom for the victim's published pages to survive, resuming
+    a preempted request is a cache hit, not a recompute: the resume
+    admission grants its own previously-written pages back."""
+    cfg, params = build()
+    specs = [(4, 30), (16, 10)]
+    prompts = prompts_for(cfg, 5, [lp for lp, _ in specs])
+    eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=11,
+                     chunk_size=4, prefix_cache=True)
+    for uid, (lp, mn) in enumerate(specs):
+        eng.submit(Request(uid=uid, prompt=prompts[uid], max_new=mn))
+    preempted, hit_tokens = [], 0
+    while eng.scheduler.has_work():
+        out = eng.step()
+        preempted.extend(out.preempted)
+        hit_tokens += out.prefix_hit_tokens
+    assert preempted, "no eviction — shrink the pool"
+    assert hit_tokens > 0, "resume never hit the published prefix"
+    # and the streams still match a cold, uncontended run
+    for uid, (lp, mn) in enumerate(specs):
+        solo = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=16,
+                          chunk_size=4)
+        solo.submit(Request(uid=uid, prompt=prompts[uid], max_new=mn))
+        assert solo.run()[0].tokens == by_uid(eng.finished)[uid]
+
+
+def test_cow_isolates_writers_from_cached_pages():
+    """Partial-page hits copy-on-write: a request that writes into the
+    middle of a cached page gets a private copy, and the original page
+    still serves later exact-prefix requests bit-identically."""
+    cfg, params = build()
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, cfg.vocab_size, 21).astype(np.int32)  # 2⅝ pages
+
+    def cold(uid, prompt):
+        eng = EngineCore(cfg, params, lanes=1, page_size=PS, num_pages=32,
+                         chunk_size=PS)
+        eng.submit(Request(uid=uid, prompt=prompt, max_new=4))
+        return drain(eng)[0][uid]
+
+    eng = EngineCore(cfg, params, lanes=1, page_size=PS, num_pages=32,
+                     chunk_size=PS, prefix_cache=True)
+
+    def warm(uid, prompt):
+        eng.submit(Request(uid=uid, prompt=prompt, max_new=4))
+        return drain(eng)[0][uid]
+
+    assert warm(0, base) == cold(0, base)          # publishes 21-row prefix
+    # prefix of the cached stream ending mid-page: 1 full page + 6-row
+    # partial hit, CoW before its first generated row lands
+    assert warm(1, base[:14]) == cold(1, base[:14])
+    assert eng.kv.cow_copies >= 1, "partial-page hit never copied"
+    # the cached original must be untouched: an exact re-serve still matches
+    assert warm(2, base) == cold(2, base)
+    check_pool(eng.kv, eng.prefix_cache)
+
+
+# ------------------------------------------- no-prefill-work guarantee --
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+def test_hit_path_skips_prefill_compute(kv_quant):
+    """The reused prefix provably costs no prefill compute: serving the
+    same prompt warm (a) traces no new step function (compile counter
+    flat), and (b) executes only width-1 steps — the row accounting shows
+    one live token per step, never a prefill chunk, and total computed
+    rows equal the cold tokens alone (known − hit), not the prompt."""
+    cfg, params = build(kv_quant=kv_quant)
+    prompt = prompts_for(cfg, 3, (3 * PS,))[0]          # 24 tokens
+    eng = EngineCore(cfg, params, lanes=1, page_size=PS, num_pages=32,
+                     chunk_size=PS, prefix_cache=True)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=4))
+    _, cold_outs = drain(eng)
+    cold_tokens = eng.finished[0].tokens
+    eng.finished.clear()
+    traced = eng.trace_count
+    assert sum(o.live_rows for o in cold_outs) == len(prompt) + 3
+
+    eng.submit(Request(uid=1, prompt=prompt, max_new=4))
+    _, outs = drain(eng)
+    assert eng.trace_count == traced, \
+        "the hit path traced a new step function"
+    hit = sum(o.prefix_hit_tokens for o in outs)
+    assert hit == len(prompt) - 1                       # known − 1 cap
+    # every warm step is a width-1 sampling step: no prefill rows anywhere
+    # (the single cold token is the degenerate chunk of one — a decode)
+    assert [o.live_rows for o in outs] == [1] * 4
+    assert [o.padded_rows for o in outs] == [1] * 4
+    assert sum(o.prefill_tokens for o in outs) == 0
+    assert sum(o.decode_tokens for o in outs) == 4
+    assert eng.finished[0].tokens == cold_tokens
