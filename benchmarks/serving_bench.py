@@ -36,7 +36,21 @@ across PRs:
    static shapes stay warm — and once more at a repeated (warm) length.
    Each arm is tagged ``prefill_mode: chunked|scatter``.
 
-4. **Prefix reuse** — the shared-system-prompt workload: N requests open
+4. **Speculative decoding** — draft-then-verify A/B, spec engine (n-gram
+   proposer, k=4) vs an identical non-spec engine, three arms.
+   *Repetitive*: N identical greedy requests — once the first stream
+   finishes, the proposer's history replays it and the verify accepts
+   nearly every draft, so each drafting step commits several tokens
+   (nightly CI asserts ``accepted_per_spec_step > 1.5``).
+   *Adversarial*: lookup-hostile traffic — the proposer issues no drafts
+   and speculation must not cost throughput (CI asserts the spec/non-spec
+   tok/s ratio ≥ 0.8).  *Rejection*: a maximally wrong proposer — every
+   draft verified and rolled back, the worst-case cost bound (recorded,
+   no floor).  Acceptance rate, accepted-tokens-per-drafting-step and
+   tok/s are recorded per arm; every arm drains until a pass compiles
+   nothing new, so the reported numbers are a warm server's.
+
+5. **Prefix reuse** — the shared-system-prompt workload: N requests open
    with the same page-aligned prefix and differ only in their tails.  The
    first request prefills cold and publishes its full pages into the radix
    prefix cache; every later admission is granted those resident pages and
@@ -451,6 +465,148 @@ def _prefill_results(tiny: bool) -> Dict[str, Any]:
                 / arms["chunked"]["ttft_ms_warm"]}
 
 
+# ------------------------------------------------------ speculative decode --
+
+def _spec_traffic(vocab: int, tiny: bool, repetitive: bool, seed: int = 5):
+    """Traffic for the draft-then-verify A/B.
+
+    ``repetitive``: N *identical* greedy requests.  Greedy decoding is
+    deterministic, so every request regenerates the same stream; after the
+    first finishes, the n-gram proposer's history ring replays it and the
+    verify accepts nearly every draft — the lookup-friendly best case
+    (agentic retries, self-consistency sampling, templated output).
+
+    ``repetitive=False``: all-distinct random prompts, used by the
+    adversarial/rejection arms below.
+    """
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    n = 6 if tiny else 16
+    lp = 12 if tiny else 48
+    max_new = 16 if tiny else 32
+    if repetitive:
+        base = rng.integers(0, vocab, lp).astype(np.int32)
+        prompts = [base.copy() for _ in range(n)]
+    else:
+        prompts = [rng.integers(0, vocab, lp).astype(np.int32)
+                   for _ in range(n)]
+    return [Request(uid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def _no_drafts(stream, k):
+    """The n-gram proposer's behaviour on genuinely lookup-hostile traffic:
+    no trailing n-gram ever recurs, so it returns no drafts.  Modelled
+    explicitly because the *random-weight* smoke model's greedy streams
+    settle into short token loops, which would make any real n-gram
+    matcher fire on any traffic — a real tokenizer+model stays quiet here.
+    """
+    return []
+
+
+class _JunkProposer:
+    """Rejection worst case: always drafts k uniform-random tokens, so
+    acceptance is ~1/vocab per draft — the engine pays the full 1+k verify
+    stream and commits ~1 token.  Bounds the cost of a maximally wrong
+    proposer (recorded for trajectory; no CI floor — CPU steps are
+    compute-bound, so extra verify rows cost linearly here, unlike the
+    bandwidth-bound accelerator regime the feature targets)."""
+
+    def __init__(self, vocab: int, seed: int = 9):
+        self.vocab = vocab
+        self.rng = np.random.default_rng(seed)
+
+    def __call__(self, stream, k):
+        return [int(t) for t in self.rng.integers(0, self.vocab, k)]
+
+
+def _spec_drain(eng, requests) -> Dict[str, Any]:
+    """Drain one pass and attach the pass's speculative deltas (the
+    engine's counters are lifetime; passes are diffed)."""
+    d0, a0, s0 = eng.drafted_total, eng.accepted_total, eng.spec_steps
+    res = _instrumented_drain(
+        eng, requests, lambda e: e.pages_in_use * e.kv.page_size, core=True)
+    res["drafted_tokens"] = eng.drafted_total - d0
+    res["accepted_tokens"] = eng.accepted_total - a0
+    res["spec_steps"] = eng.spec_steps - s0
+    res["acceptance"] = (res["accepted_tokens"]
+                         / max(res["drafted_tokens"], 1))
+    res["accepted_per_spec_step"] = (res["accepted_tokens"]
+                                     / max(res["spec_steps"], 1))
+    return res
+
+
+def _speculative_results(tiny: bool) -> Dict[str, Any]:
+    """Spec vs non-spec engine at equal lanes/pages, three arms:
+
+    - ``repetitive`` — identical requests through the n-gram proposer with
+      history: near-total acceptance, several tokens per drafting step
+      (CI floor ``accepted_per_spec_step > 1.5``);
+    - ``adversarial`` — lookup-hostile traffic, proposer never matches so
+      no drafts are issued: speculation must cost ~nothing
+      (CI floor tok/s ratio ≥ 0.8);
+    - ``rejection`` — a maximally wrong proposer, every draft verified and
+      thrown away: the worst-case cost bound (recorded, no floor).
+
+    Engines are reused across passes — early passes warm the jit caches
+    and (repetitive arm) seed the proposer's history with the finished
+    streams — and each arm keeps draining until a pass compiles nothing
+    new (``trace_count`` stable), so the reported pass is a warm server,
+    never an XLA-compile measurement.  The non-spec baseline serves the
+    *same* traffic, so the tok/s ratio isolates the draft/verify
+    machinery itself.
+    """
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import EngineCore, NGramProposer
+
+    page = 8 if tiny else 16
+    lanes = 2 if tiny else 4
+    spec_k = 4
+    chunk = 2 * page
+    cfg = get_config("deepseek-7b-smoke")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    lp, max_new = (12, 16) if tiny else (48, 32)
+    req_rows = lp + max_new + spec_k
+    num_pages = lanes * -(-req_rows // page) + 4
+
+    def engine(proposer: Any) -> Any:
+        kw = {} if proposer is None else dict(
+            speculative=True, spec_k=spec_k, proposer=proposer)
+        return EngineCore(cfg, params, lanes=lanes, page_size=page,
+                          num_pages=num_pages, chunk_size=chunk,
+                          max_len=num_pages * page, mode="ragged", **kw)
+
+    arm_defs = (
+        ("repetitive", True,
+         lambda: NGramProposer(max_ngram=3, history=8)),
+        ("adversarial", False, lambda: _no_drafts),
+        ("rejection", False, lambda: _JunkProposer(cfg.vocab_size)),
+    )
+    arms: Dict[str, Any] = {}
+    for name, repetitive, mk in arm_defs:
+        eng_s, eng_b = engine(mk()), engine(None)
+        for _ in range(6):
+            t0, b0 = eng_s.trace_count, eng_b.trace_count
+            spec = _spec_drain(eng_s, _spec_traffic(cfg.vocab_size, tiny,
+                                                    repetitive))
+            base = _spec_drain(eng_b, _spec_traffic(cfg.vocab_size, tiny,
+                                                    repetitive))
+            if eng_s.trace_count == t0 and eng_b.trace_count == b0:
+                break
+        arms[name] = {"spec": spec, "baseline": base,
+                      "tok_s_ratio": spec["tok_s"] / base["tok_s"],
+                      "accepted_per_spec_step":
+                          spec["accepted_per_spec_step"],
+                      "acceptance": spec["acceptance"]}
+    return {"page_size": page, "lanes": lanes, "spec_k": spec_k,
+            "num_pages": num_pages, "max_new": max_new,
+            "proposer": "ngram(max_ngram=3, history=8)",
+            "repetitive": arms["repetitive"],
+            "adversarial": arms["adversarial"],
+            "rejection": arms["rejection"]}
+
+
 # ------------------------------------------------------------ prefix reuse --
 
 def _prefix_reuse_results(tiny: bool) -> Dict[str, Any]:
@@ -536,6 +692,7 @@ def run_serving(tiny: bool = False) -> Dict[str, Any]:
             "engines": _engine_results(tiny),
             "step_breakdown": _breakdown_results(tiny),
             "prefill_ttft": _prefill_results(tiny),
+            "speculative": _speculative_results(tiny),
             "prefix_reuse": _prefix_reuse_results(tiny)}
 
 
@@ -548,6 +705,7 @@ def write_json(results: Dict[str, Any], path: str = _JSON_DEFAULT) -> None:
 def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
     e, bd = results["engines"], results["step_breakdown"]
     pf = results["prefill_ttft"]
+    sp = results["speculative"]
     px = results["prefix_reuse"]
     yield ("serving/slot_contiguous_tok_s", e["slot"]["tok_s"],
            f"{e['slot']['tokens']} toks; {e['slot']['lanes']} lanes x "
@@ -604,6 +762,29 @@ def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
            "chunked vs scatter on all-distinct prompt lengths")
     yield ("serving/ttft_speedup_warm", pf["ttft_speedup_warm"],
            "chunked vs scatter at a repeated (pre-compiled) length")
+    rep, adv = sp["repetitive"], sp["adversarial"]
+    yield ("serving/spec_accepted_per_step", rep["accepted_per_spec_step"],
+           f"extra tokens committed per drafting step, repetitive stream "
+           f"(k={sp['spec_k']}, {sp['proposer']}; CI floor 1.5)")
+    yield ("serving/spec_acceptance_repetitive", rep["acceptance"],
+           f"{rep['spec']['accepted_tokens']} / "
+           f"{rep['spec']['drafted_tokens']} drafts accepted over "
+           f"{rep['spec']['spec_steps']} drafting steps")
+    yield ("serving/spec_tok_s_repetitive", rep["spec"]["tok_s"],
+           f"spec engine, {sp['lanes']} lanes; non-spec baseline "
+           f"{rep['baseline']['tok_s']:.4g} tok/s on the same stream")
+    yield ("serving/spec_speedup_repetitive", rep["tok_s_ratio"],
+           f"spec vs non-spec tok/s, lookup-friendly traffic "
+           f"({rep['spec']['steps']} vs {rep['baseline']['steps']} steps)")
+    yield ("serving/spec_tok_s_ratio_adversarial", adv["tok_s_ratio"],
+           f"spec vs non-spec tok/s on lookup-hostile traffic "
+           f"({adv['spec']['drafted_tokens']} drafts issued; CI floor 0.8)")
+    rej = sp["rejection"]
+    yield ("serving/spec_tok_s_ratio_rejection", rej["tok_s_ratio"],
+           f"worst case: every draft verified and rolled back "
+           f"(acceptance {rej['acceptance']:.3g} over "
+           f"{rej['spec']['drafted_tokens']} junk drafts; CPU is "
+           f"compute-bound so verify rows cost linearly here)")
     yield ("serving/prefix_cold_ttft_ms", px["cold_ttft_ms"],
            f"first shared-prefix request ({px['shared_prefix_tokens']}+"
            f"{px['tail_tokens']} tokens), compile-warm, cache miss")

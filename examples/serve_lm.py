@@ -31,6 +31,12 @@ def main():
                     help="shared-prefix KV reuse: requests open with a "
                          "common system prefix, served from the radix cache "
                          "after the first")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-then-verify speculative decoding (n-gram "
+                         "prompt lookup, greedy lanes only; greedy output "
+                         "is token-identical, just fewer steps)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per lane per step")
     ap.add_argument("--slot", action="store_true",
                     help="force the slot-contiguous engine (required for "
                          "SSM-state caches, e.g. falcon-mamba-7b-smoke)")
@@ -49,10 +55,13 @@ def main():
                 cfg, params, lanes=args.lanes, page_size=args.page_size,
                 num_pages=args.lanes * -(-args.max_len // args.page_size),
                 chunk_size=args.chunk_size, max_len=args.max_len,
-                prefix_cache=args.prefix_cache)
+                prefix_cache=args.prefix_cache,
+                speculative=args.speculative, spec_k=args.spec_k)
             kind = f"EngineCore paged/chunked(c={args.chunk_size})"
             if args.prefix_cache:
                 kind += "+prefix-cache"
+            if args.speculative:
+                kind += f"+spec(k={args.spec_k})"
         except UnsupportedCacheLayout as e:
             # ring/SSM layouts, or a family with no paged chunk step
             # (e.g. encdec) — the slot engine serves both.
@@ -90,6 +99,12 @@ def main():
               f"(hit_rate {stats['hit_rate']:.3f}), "
               f"{stats['cached_pages']} pages resident, "
               f"{stats['cow_copies']} CoW copies")
+    spec = getattr(engine, "spec_stats", {})
+    if spec:
+        print(f"  speculative: {spec['accepted_tokens']} of "
+              f"{spec['drafted_tokens']} drafts accepted "
+              f"(+{spec['accepted_per_spec_step']:.2f} tok per drafting "
+              f"step, {spec['spec_steps']} drafting steps)")
     for r in sorted(done, key=lambda r: r.uid)[:6]:
         mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
         print(f"  req {r.uid:2d} ({mode:7s}, prompt {len(r.prompt):2d}): "

@@ -37,6 +37,13 @@ def main() -> None:
     ap.add_argument("--cache-pages", type=int, default=None,
                     help="cap on resident prefix-cache pages (default: "
                          "bounded only by the pool, reclaimed LRU-first)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-then-verify speculative decoding: an n-gram "
+                         "prompt-lookup proposer drafts up to --spec-k "
+                         "tokens per greedy decode lane, verified in the "
+                         "same ragged step (greedy output is unchanged)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per lane per step")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -58,9 +65,12 @@ def main() -> None:
                          num_pages=args.lanes * pages_per_lane,
                          chunk_size=args.chunk_size, max_len=args.max_len,
                          prefix_cache=args.prefix_cache,
-                         cache_pages=args.cache_pages)
+                         cache_pages=args.cache_pages,
+                         speculative=args.speculative, spec_k=args.spec_k)
         print(f"engine: EngineCore (paged, chunk={args.chunk_size}, "
-              f"prefix_cache={'on' if args.prefix_cache else 'off'})")
+              f"prefix_cache={'on' if args.prefix_cache else 'off'}, "
+              f"speculative="
+              f"{f'k={args.spec_k}' if args.speculative else 'off'})")
     except UnsupportedCacheLayout as e:
         print(f"engine: ServingEngine (slot-contiguous) — {e}")
         eng = ServingEngine(cfg, params, slots=args.lanes,
@@ -85,6 +95,13 @@ def main() -> None:
               f"({stats['hit_tokens']} of {stats['lookup_tokens']} known "
               f"tokens), {stats['cached_pages']} pages cached, "
               f"{stats['cow_copies']} CoW copies")
+    spec = getattr(eng, "spec_stats", {})
+    if spec:
+        print(f"speculative: {spec['accepted_tokens']} of "
+              f"{spec['drafted_tokens']} drafts accepted "
+              f"(acceptance {spec['acceptance']:.3f}, "
+              f"+{spec['accepted_per_spec_step']:.2f} tok per "
+              f"drafting step over {spec['spec_steps']} steps)")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.tokens[:12]}")
 

@@ -43,9 +43,11 @@ class Model:
     # (EngineCore.step's workhorse; there is no separate paged decode entry)
     prefill_chunk_paged: Optional[Callable] = None
     # (params, tokens (T,), pools, token_pages (T, P), pos (T,),
-    # last_idx (lanes,)) → (logits (lanes, V), pools): the token-level
-    # ragged serving step — one packed stream of T = Σ live tokens, no
-    # (lanes, C) padding (EngineCore mode="ragged"'s workhorse)
+    # last_idx (lanes,) or (lanes, 1+k)) → (logits (lanes[, 1+k], V),
+    # pools): the token-level ragged serving step — one packed stream of
+    # T = Σ live tokens, no (lanes, C) padding (EngineCore mode="ragged"'s
+    # workhorse; the 2-D last_idx form is the speculative verify step,
+    # extracting every drafted position's logits from the same stream)
     step_ragged: Optional[Callable] = None
 
 

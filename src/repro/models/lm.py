@@ -392,10 +392,16 @@ def lm_step_ragged(cfg: ModelConfig, params: Params, tokens: jax.Array,
     ``(lanes, C)``-padded intermediate exists anywhere in this graph (the
     ragged-equivalence suite walks the jaxpr to prove it).
 
-    Logit extraction is segment-masked: only ``last_idx`` (lanes,) — the
-    stream index of each lane's final token this step (duplicated/zero for
-    idle lanes) — is unembedded, returning (lanes, V); the caller samples
-    lane ``i`` exactly when the step consumed that lane's last known token.
+    Logit extraction is segment-masked: only ``last_idx`` — stream indices
+    into the packed ``(T,)`` rows (duplicated/zero for idle lanes) — is
+    unembedded.  ``last_idx`` (lanes,) → logits (lanes, V): each lane's
+    final token this step; the caller samples lane ``i`` exactly when the
+    step consumed that lane's last known token.  Speculative verify passes
+    ``last_idx`` (lanes, 1 + k) → logits (lanes, 1 + k, V): the lane's
+    decode row plus its k drafted rows, so one forward pass yields the
+    argmax at every drafted position (the gather is still O(lanes · k)
+    rows, never the (T, V) tensor, and there is no per-draft loop — the
+    drafted rows ride the same packed stream).
     """
     p_tok = jnp.asarray(pos, jnp.int32)
     x = L.embed_apply(cfg, params["embed"], tokens[None], p_tok[None])
@@ -405,6 +411,8 @@ def lm_step_ragged(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x = L.norm_apply(cfg, params["final_norm"], x)
     # (lanes,) gather BEFORE unembedding: the (T, V) logits tensor would be
     # the largest activation of the step; only lanes' last rows are needed.
-    x = jnp.take(x[0], jnp.asarray(last_idx, jnp.int32), axis=0)
+    idx = jnp.asarray(last_idx, jnp.int32)
+    x = jnp.take(x[0], idx, axis=0)       # (lanes, D) or (lanes, 1+k, D)
     logits = L.unembed_apply(cfg, params["embed"], params.get("lm_head"), x)
-    return maybe_shard(logits, ("dp", "tp")), caches
+    spec = ("dp", "tp") if idx.ndim == 1 else ("dp", None, "tp")
+    return maybe_shard(logits, spec), caches

@@ -82,6 +82,13 @@ class StepOutput:
     # pages at this step's admissions — rows the engine will never stream
     # because their KV already sits in the pool (0 with the cache off).
     prefix_hit_tokens: int = 0
+    # Speculative-decoding accounting (0 unless the engine drafts): drafted
+    # rows this step streamed past the known tokens, and how many of them
+    # the verify accepted.  A drafting lane commits 1 + its accepted drafts
+    # tokens in one step; ``accepted / steps`` is the bench's
+    # accepted-tokens-per-step metric.
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
 
     @property
     def mixed(self) -> bool:

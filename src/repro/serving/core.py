@@ -52,6 +52,7 @@ from repro.serving.api import (Request, RequestState, StepOutput,
 from repro.serving.paged import PagedKVCache
 from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.scheduler import Scheduler
+from repro.serving.spec import NGramProposer
 
 
 def greedy_token(logits: jax.Array) -> int:
@@ -65,6 +66,21 @@ def greedy_token(logits: jax.Array) -> int:
     v = lg.shape[-1]
     hit = lg == jnp.max(lg)
     return int(jnp.min(jnp.where(hit, jnp.arange(v), v)))
+
+
+def greedy_tokens(logits: np.ndarray) -> np.ndarray:
+    """Vectorised :func:`greedy_token` over leading axes: (..., V) → (...,).
+
+    The speculative verify rule is *argmax equality* against this exact
+    pick, row by row — max is an exact float op, so the batched numpy form
+    here and the per-row jax form above agree bit-for-bit on the same
+    logits, which is what makes accepted drafts token-identical to the
+    sequential greedy stream.
+    """
+    lg = np.asarray(logits)
+    v = lg.shape[-1]
+    hit = lg == lg.max(axis=-1, keepdims=True)
+    return np.min(np.where(hit, np.arange(v), v), axis=-1)
 
 
 def sample_token(logits: jax.Array, temperature: float,
@@ -98,10 +114,20 @@ class EngineCore:
                  step_tokens: Optional[int] = None, mode: str = "ragged",
                  token_buckets: Optional[Any] = None,
                  prefix_cache: bool = False,
-                 cache_pages: Optional[int] = None, seed: int = 0):
+                 cache_pages: Optional[int] = None, seed: int = 0,
+                 speculative: bool = False, spec_k: int = 4,
+                 proposer: Any = None):
         if mode not in ("ragged", "padded"):
             raise ValueError(f"unknown EngineCore mode {mode!r}; "
                              f"expected 'ragged' or 'padded'")
+        if speculative and mode != "ragged":
+            # The verify step IS the ragged step (drafted rows ride the
+            # packed stream); the padded block extracts last-row logits
+            # only and has no lane room for 1 + k chunks.
+            raise ValueError("speculative decoding requires mode='ragged'")
+        if speculative and spec_k < 1:
+            raise ValueError(f"speculative decoding needs spec_k >= 1, "
+                             f"got {spec_k}")
         self.cfg = cfg
         self.mode = mode
         self.model = build_model(cfg)
@@ -123,15 +149,31 @@ class EngineCore:
         # pages hold the exact KV the skipped chunks would have written).
         self.prefix_cache = (RadixPrefixCache(self.kv, max_pages=cache_pages)
                              if prefix_cache else None)
+        # Speculative decoding (opt-in): a host-side proposer drafts up to
+        # spec_k tokens per greedy decode lane; the scheduler streams the
+        # drafted chunk through the same ragged step, the engine verifies
+        # every drafted position against its own argmax in that one step,
+        # and commit/rollback happens in _finish.  Token streams are
+        # identical with speculation on or off (the acceptance rule is
+        # argmax equality against the exact greedy pick).
+        self.speculative = speculative
+        self.spec_k = spec_k if speculative else 0
+        self.proposer = (proposer if proposer is not None
+                         else NGramProposer()) if speculative else None
         self.scheduler = Scheduler(self.kv, lanes=lanes,
                                    chunk_size=chunk_size,
                                    step_tokens=step_tokens,
                                    token_buckets=token_buckets,
-                                   prefix_cache=self.prefix_cache)
+                                   prefix_cache=self.prefix_cache,
+                                   spec_k=self.spec_k,
+                                   proposer=self.proposer)
         self.chunk_size = chunk_size
         self.key = jax.random.PRNGKey(seed)
         self.finished: List[Request] = []
         self.trace_count = 0            # step-fn retraces (compile counter)
+        self.drafted_total = 0          # speculative telemetry, lifetime
+        self.accepted_total = 0
+        self.spec_steps = 0             # steps that carried ≥ 1 draft
 
         m = self.model
 
@@ -192,8 +234,11 @@ class EngineCore:
         s = self.scheduler
         wants = s.begin_step()
         c = 1 if all(q == 1 for q in wants.values()) else self.chunk_size
-        if wants and len(wants) == self.lanes and \
+        if wants and len(wants) == self.lanes and not s.drafting and \
                 all(q == c for q in wants.values()):
+            # Full-width non-drafting steps go to the padded block; a step
+            # carrying drafts never does — the block extracts last-row
+            # logits only, the verify needs every drafted position's.
             plans, preempted = s.plans_for(wants)
             return self._run_block(plans, preempted)
         batch, preempted = s.batch_for(wants)
@@ -216,7 +261,7 @@ class EngineCore:
         q_len = np.zeros((b,), np.int32)
         tbl = np.full((b, width), scratch, np.int32)
         for i, p in enumerate(plans):
-            toks[i, c - p.q_len:] = p.run.next_tokens(p.q_len)
+            toks[i, c - p.q_len:] = p.stream_tokens()
             kv_len[i] = p.run.rows + p.q_len
             q_len[i] = p.q_len
             tbl[i, :len(p.run.pages)] = p.run.pages
@@ -238,9 +283,22 @@ class EngineCore:
                 prefix_hit_tokens=self.scheduler.prefix_hit_tokens_step)
         # Stream index of each plan's final token; idle tail lanes point at
         # row 0 (their logits are computed but never read — the (lanes, V)
-        # output shape stays static across schedules).
-        last_idx = np.zeros((self.lanes,), np.int32)
-        last_idx[:len(plans)] = batch.cu_seqlens[1:] - 1
+        # output shape stays static across schedules).  Speculative engines
+        # always pass the (lanes, 1 + spec_k) form — row j of lane i is the
+        # lane's decode row plus its j-th drafted row, clamped to the last
+        # real draft — so the verify extraction is one static-shape gather:
+        # k stays a compile-time constant and trace count stays O(1)
+        # whether a step carries 0 or k drafts.
+        if self.speculative:
+            last_idx = np.zeros((self.lanes, self.spec_k + 1), np.int32)
+            ramp = np.arange(self.spec_k + 1, dtype=np.int32)
+            for i, p in enumerate(plans):
+                d = len(p.drafts)
+                base = int(batch.cu_seqlens[i + 1]) - 1 - d
+                last_idx[i] = base + np.minimum(ramp, d)
+        else:
+            last_idx = np.zeros((self.lanes,), np.int32)
+            last_idx[:len(plans)] = batch.cu_seqlens[1:] - 1
 
         logits, self.kv.pool = self._ragged(
             self.params, self.kv.pool, jnp.asarray(batch.table),
@@ -251,7 +309,20 @@ class EngineCore:
 
     def _finish(self, plans, logits, preempted, *, live: int,
                 padded: int) -> StepOutput:
-        """Shared step tail: advance cursors, sample, retire finished."""
+        """Shared step tail: advance cursors, sample/verify, retire finished.
+
+        Non-speculative lanes commit exactly one sampled token.  A drafting
+        lane streamed ``1 + d`` rows; the verify rule recovers the greedy
+        pick ``g[j]`` at every drafted position from the step's own logits
+        and commits ``g[0..acc]`` where ``acc`` is the longest prefix with
+        ``g[j] == drafts[j]`` — exactly the tokens sequential greedy decode
+        would have produced, one step at a time.  The cursor advances by
+        ``base + (committed − 1)`` — the last committed token is *new* (its
+        KV row is next step's mandatory write), the earlier ones already
+        have their rows from this step — and :meth:`PagedKVCache.uncommit`
+        returns any page holding only rejected rows, leaving pool state
+        identical to never having drafted.
+        """
         out_tokens = {}
         finished = []
         # Phase comes from the scheduler (remaining-known at planning), not
@@ -261,27 +332,58 @@ class EngineCore:
                         if p.run.req.state is RequestState.PREFILL)
         n_decode = sum(1 for p in plans
                        if p.run.req.state is RequestState.DECODE)
+        lg = np.asarray(logits)       # (lanes, V) | spec: (lanes, 1+k, V)
+        spec = lg.ndim == 3
+        drafted = sum(len(p.drafts) for p in plans)
+        accepted = 0
         for i, p in enumerate(plans):
             run, req = p.run, p.run.req
-            sample = p.sample             # before the cursor moves
-            run.rows += p.q_len
-            if not sample:
+            if not p.sample:
+                run.rows += p.q_len
                 continue
-            tok = self._sample(logits[i], req.temperature)
-            req.tokens.append(int(tok))
-            out_tokens[req.uid] = int(tok)
-            if (len(req.tokens) >= req.max_new
-                    or (req.eos_id is not None and int(tok) == req.eos_id)):
+            base = p.q_len - len(p.drafts)
+            if p.drafts:
+                g = greedy_tokens(lg[i, :len(p.drafts) + 1])
+                acc = 0
+                while acc < len(p.drafts) and int(g[acc]) == p.drafts[acc]:
+                    acc += 1
+                commit = [int(t) for t in g[:acc + 1]]
+            else:
+                row = lg[i, 0] if spec else lg[i]
+                commit = [self._sample(row, req.temperature)]
+            done = False
+            n = 0
+            for tok in commit:        # eos / max_new can cut a commit short
+                req.tokens.append(tok)
+                out_tokens[req.uid] = tok
+                n += 1
+                if (len(req.tokens) >= req.max_new
+                        or (req.eos_id is not None and tok == req.eos_id)):
+                    done = True
+                    break
+            run.rows += base + n - 1
+            if p.drafts:
+                accepted += n - 1
+                run.pages = self.kv.uncommit(run.pages, run.rows)
+            if done:
                 req.done = True
                 finished.append(req.uid)
                 self.finished.append(req)
+                if self.proposer is not None and \
+                        hasattr(self.proposer, "observe"):
+                    self.proposer.observe(req.known_tokens())
                 self.scheduler.finish(run)
+        self.drafted_total += drafted
+        self.accepted_total += accepted
+        if drafted:
+            self.spec_steps += 1
         return StepOutput(tokens=out_tokens, finished=tuple(finished),
                           preempted=preempted, lanes=len(plans),
                           prefill_tokens=n_prefill, decode_tokens=n_decode,
                           live_rows=live, padded_rows=padded,
                           prefix_hit_tokens=(
-                              self.scheduler.prefix_hit_tokens_step))
+                              self.scheduler.prefix_hit_tokens_step),
+                          drafted_tokens=drafted, accepted_tokens=accepted)
 
     def run(self, max_steps: int = 100_000) -> List[Request]:
         steps = 0
@@ -301,6 +403,26 @@ class EngineCore:
     def prefix_stats(self) -> dict:
         """Prefix-cache telemetry (empty dict when the cache is off)."""
         return self.prefix_cache.stats() if self.prefix_cache else {}
+
+    @property
+    def spec_stats(self) -> dict:
+        """Speculative-decoding telemetry (empty dict when not drafting).
+
+        ``acceptance`` is accepted/drafted; ``accepted_per_spec_step`` is
+        the extra tokens each drafting step committed beyond the one it
+        would have anyway — the bench's headline number.
+        """
+        if not self.speculative:
+            return {}
+        return {
+            "drafted_tokens": self.drafted_total,
+            "accepted_tokens": self.accepted_total,
+            "spec_steps": self.spec_steps,
+            "acceptance": (self.accepted_total / self.drafted_total
+                           if self.drafted_total else 0.0),
+            "accepted_per_spec_step": (self.accepted_total / self.spec_steps
+                                       if self.spec_steps else 0.0),
+        }
 
     @property
     def page_tables(self) -> List[List[int]]:

@@ -215,6 +215,29 @@ class PagedKVCache:
         for p in pages:
             self.release_one(p)
 
+    def uncommit(self, pages: List[int], rows: int) -> List[int]:
+        """Shrink a page table to what ``rows`` committed rows need,
+        releasing the surplus tail pages — the rollback half of speculative
+        decoding.  The engine grants pages for the *drafted* worst case
+        (cursor + 1 + k rows), the verify step writes KV rows into them,
+        and commit keeps only the accepted prefix; any page holding nothing
+        but rejected rows comes back here.  Rejected rows need no content
+        rollback: a row past the cursor is dead — every read is masked by
+        the reader's own ``kv_len``/``q_pos`` bound, and the row is
+        rewritten before the cursor ever crosses it again.  Only the page
+        *accounting* must rewind, and since draft pages were freshly
+        allocated this step (drafts extend the table's tail; shared prefix
+        pages are never past the cursor), releasing them restores the free
+        heap and refcounts exactly as if the drafts were never granted.
+        Returns the trimmed table (a new list)."""
+        keep = self.pages_needed(rows)
+        assert keep <= len(pages), (
+            f"uncommit: {rows} rows need {keep} pages but table has "
+            f"{len(pages)}")
+        surplus = pages[keep:]
+        self.release(surplus)
+        return pages[:keep]
+
     def cow(self, page: int) -> int:
         """Copy-on-write: make ``page`` writable for one holder.
 

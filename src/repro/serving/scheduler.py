@@ -128,15 +128,35 @@ class RunningRequest:
 
 @dataclasses.dataclass(frozen=True)
 class LanePlan:
-    """One lane of one step: stream ``q_len`` tokens of ``run``'s cursor."""
+    """One lane of one step: stream ``q_len`` tokens of ``run``'s cursor.
+
+    With speculative decoding the streamed chunk may extend past the known
+    stream: the last ``len(drafts)`` of the ``q_len`` tokens are *drafted*
+    (proposed, unverified — see ``serving/spec.py``); the first
+    ``q_len - len(drafts)`` still come off the cursor.  The engine verifies
+    every drafted position in the same step and commits only the accepted
+    prefix, so the cursor may advance less than ``q_len``.
+    """
     run: RunningRequest
     q_len: int
+    drafts: Tuple[int, ...] = ()
 
     @property
     def sample(self) -> bool:
         # The step consumes through the last known token → its final-row
-        # logits are the next-token distribution.
-        return self.run.rows + self.q_len == self.run.known()
+        # logits are the next-token distribution.  Drafted tokens sit past
+        # the known stream by construction, so a drafting lane always
+        # samples (it is a decode lane whose chunk got extended).
+        return (self.run.rows + self.q_len - len(self.drafts)
+                == self.run.known())
+
+    def stream_tokens(self) -> np.ndarray:
+        """The q_len tokens this lane streams: known-stream chunk ⊕ drafts."""
+        base = self.run.next_tokens(self.q_len - len(self.drafts))
+        if not self.drafts:
+            return base
+        return np.concatenate(
+            [base, np.asarray(self.drafts, np.int32)])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,12 +186,20 @@ class Scheduler:
                  chunk_size: int = 16,
                  step_tokens: Optional[int] = None,
                  token_buckets: Optional[Sequence[int]] = None,
-                 prefix_cache: Optional[RadixPrefixCache] = None):
+                 prefix_cache: Optional[RadixPrefixCache] = None,
+                 spec_k: int = 0, proposer=None):
         assert chunk_size >= 1
         self.kv = kv
         self.cache = prefix_cache
         self.lanes = lanes
         self.chunk_size = chunk_size
+        # Speculative decoding (opt-in): with spec_k > 0 and a proposer
+        # (see serving/spec.py), decode lanes may stream 1 + d drafted
+        # tokens per step, d ≤ spec_k.  Drafts spend only *leftover* step
+        # budget and degrade before any resident pays for them.
+        self.spec_k = spec_k
+        self.proposer = proposer
+        self._drafts: Dict[int, Tuple[int, ...]] = {}   # ticket → drafts
         # Fairness knob: max tokens per step across all lanes.  The default
         # admits every decode lane plus one full prefill chunk — prompts
         # stream through spare capacity without monopolising the batch.
@@ -345,11 +373,17 @@ class Scheduler:
 
     # ---------------------------------------------------------------- plan
     def _plan_wants(self) -> Dict[int, int]:
-        """Split the step's token budget: ticket → q_len.  Decode lanes
-        (one token each) are planned first so prefill bursts never starve
-        resident decodes; prefill lanes then take chunks, oldest first."""
+        """Split the step's token budget: ticket → q_len.  Mandatory work
+        first — decode lanes one token each, so prefill bursts never starve
+        resident decodes, then prefill chunks oldest first — and only
+        *leftover* budget funds speculative drafts (oldest greedy decode
+        lane first, up to ``spec_k`` each).  Draft rows are strictly
+        opportunistic: a budget-starved step plans exactly what the
+        non-speculative scheduler would, it never sheds mandatory tokens
+        to keep drafting (the degrade-not-evict fairness rule)."""
         budget = self.step_tokens
         wants: Dict[int, int] = {}
+        decodes: List[RunningRequest] = []
         for run in sorted(self.running,
                           key=lambda r: (r.remaining() > 1, r.ticket)):
             q = min(self.chunk_size, run.remaining(), budget)
@@ -357,24 +391,81 @@ class Scheduler:
                 continue
             budget -= q
             wants[run.ticket] = q
+            if run.remaining() == 1:
+                decodes.append(run)
+        if self.spec_k > 0 and self.proposer is not None and budget > 0:
+            for run in sorted(decodes, key=lambda r: r.ticket):
+                if budget <= 0:
+                    break
+                if run.req.temperature > 0.0:
+                    continue    # acceptance rule is argmax equality: greedy
+                # d accepted drafts commit d + 1 tokens; never draft past
+                # max_new (also keeps rows ≤ prompt + max_new − 1, inside
+                # the worst case validated at submit)
+                cap = min(self.spec_k, budget,
+                          run.req.max_new - len(run.req.tokens) - 1)
+                if cap <= 0:
+                    continue
+                drafts = tuple(
+                    int(t) for t in
+                    self.proposer(run.req.known_tokens(), cap))[:cap]
+                if not drafts:
+                    continue
+                self._drafts[run.ticket] = drafts
+                wants[run.ticket] += len(drafts)
+                budget -= len(drafts)
         return wants
+
+    @property
+    def drafting(self) -> bool:
+        """True while the current schedule carries speculative drafts."""
+        return bool(self._drafts)
+
+    def _fits_unforced(self, run: RunningRequest, rows_after: int) -> bool:
+        """Would ``_grant_pages(run, rows_after)`` succeed *without* evicting
+        anyone?  Same arithmetic as the grant (need + CoW copies − credits
+        vs ``available_pages``), minus the preemption loop."""
+        ps = self.kv.page_size
+        lo = run.rows // ps
+        hi = min((rows_after - 1) // ps + 1, len(run.pages))
+        need = self.kv.pages_needed(rows_after) - len(run.pages)
+        cow = [i for i in range(lo, hi) if self.kv.ref[run.pages[i]] > 1]
+        credit = sum(1 for i in cow if self._cow_credit(run.pages[i]))
+        avail = self.kv.available_pages
+        return need + len(cow) - credit <= avail and (not cow or avail >= 1)
 
     def _grant_plans(self, wants: Dict[int, int]) -> List[LanePlan]:
         """Grant pages in strict ticket order (seniority decides who may
         evict whom), and only for tokens that actually got budget — a
         budget-starved lane never evicts a resident for rows it will not
         write this step.  A lane that gets no budget or loses its pages
-        simply does not appear in the plan."""
+        simply does not appear in the plan.  Speculative draft rows are
+        second-class citizens of the pool too: when granting a drafted
+        chunk would need a preemption, the drafts shrink (youngest first)
+        until the grant fits free — only the mandatory decode token may
+        evict a resident, so speculation never costs another request its
+        lane."""
         plans: List[LanePlan] = []
         for run in list(sorted(self.running, key=lambda r: r.ticket)):
             if run not in self.running:
                 continue                              # evicted by an elder
             q = wants.get(run.ticket)
-            if q is None or not self._grant_pages(run, run.rows + q):
+            if q is None:
+                continue
+            drafts = orig = self._drafts.get(run.ticket, ())
+            while drafts and not self._fits_unforced(run, run.rows + q):
+                drafts = drafts[:-1]                  # degrade, don't evict
+                q -= 1
+            if len(drafts) != len(orig):
+                if drafts:
+                    self._drafts[run.ticket] = drafts
+                else:
+                    del self._drafts[run.ticket]
+            if not self._grant_pages(run, run.rows + q):
                 continue
             run.req.state = (RequestState.DECODE if run.remaining() == 1
                              else RequestState.PREFILL)
-            plans.append(LanePlan(run, q))
+            plans.append(LanePlan(run, q, tuple(drafts)))
         return plans
 
     def begin_step(self) -> Dict[int, int]:
@@ -387,6 +478,7 @@ class Scheduler:
         one of :meth:`plans_for` / :meth:`batch_for`."""
         self._evicted_now = []
         self.prefix_hit_tokens_step = 0
+        self._drafts = {}
         self._admit()
         return self._plan_wants()
 
@@ -411,30 +503,45 @@ class Scheduler:
         return self.token_buckets[-1]
 
     def _trim_to_bucket(self, wants: Dict[int, int]) -> Dict[int, int]:
-        """Trim prefill tokens (never decodes) so the live stream lands on
-        a bucket edge: the padded width is then all live work.  Youngest
-        prefill lanes lose tokens first (FCFS-consistent), but every
-        planned lane keeps ≥ 1 token — a lane trimmed to zero would see
-        the identical plan next step and starve for as long as the decode
-        lanes keep running (e.g. 8 decode lanes exactly filling a bucket
-        plus a 2-token prefill tail).  When the bucket edge is unreachable
-        under that progress guarantee — or every bucket ≤ total sits below
-        the decode floor — pad up instead."""
+        """Trim elastic tokens (never mandatory decodes) so the live stream
+        lands on a bucket edge: the padded width is then all live work.
+        Speculative drafts are the *most* elastic work in the step — they
+        are a bet, not progress — so they go first (youngest lane first),
+        then prefill chunk tails (also youngest first, FCFS-consistent).
+        Every planned lane keeps ≥ 1 token — a lane trimmed to zero would
+        see the identical plan next step and starve for as long as the
+        decode lanes keep running (e.g. 8 decode lanes exactly filling a
+        bucket plus a 2-token prefill tail).  When the bucket edge is
+        unreachable under that progress guarantee — or every bucket ≤ total
+        sits below the mandatory-decode floor — pad up instead."""
         total = sum(wants.values())
         if total == 0 or total in self.token_buckets:
             return wants
         runs = {r.ticket: r for r in self.running}
-        floor = sum(q for t, q in wants.items()
-                    if runs[t].remaining() == 1)      # decodes: untrimmable
+        floor = sum(1 for t in wants
+                    if runs[t].remaining() == 1)      # mandatory decode rows
         below = [w for w in self.token_buckets if floor <= w <= total]
         if not below:
             return wants                              # decode-bound: pad up
         cut = total - below[-1]
-        trimmable = sum(q - 1 for t, q in wants.items()
-                        if runs[t].remaining() > 1)
+        trimmable = (sum(len(d) for d in self._drafts.values())
+                     + sum(q - 1 for t, q in wants.items()
+                           if runs[t].remaining() > 1))
         if cut > trimmable:
             return wants                              # would starve: pad up
-        for tkt in sorted(wants, reverse=True):       # youngest first
+        for tkt in sorted(self._drafts, reverse=True):  # drafts: youngest 1st
+            if cut == 0:
+                break
+            if tkt not in wants:
+                continue
+            take = min(cut, len(self._drafts[tkt]))
+            self._drafts[tkt] = self._drafts[tkt][:len(self._drafts[tkt])
+                                                  - take]
+            if not self._drafts[tkt]:
+                del self._drafts[tkt]
+            wants[tkt] -= take
+            cut -= take
+        for tkt in sorted(wants, reverse=True):       # prefill: youngest 1st
             if cut == 0:
                 break
             if runs[tkt].remaining() == 1:
@@ -459,7 +566,7 @@ class Scheduler:
         t = 0
         for i, p in enumerate(plans):
             q = p.q_len
-            tokens[t:t + q] = p.run.next_tokens(q)
+            tokens[t:t + q] = p.stream_tokens()
             pos[t:t + q] = p.run.rows + np.arange(q, dtype=np.int32)
             lane_id[t:t + q] = i
             table[t:t + q, :len(p.run.pages)] = np.asarray(

@@ -1,0 +1,130 @@
+"""Draft proposers for speculative decoding: n-gram / prompt-lookup drafts.
+
+Decode is one token per step per lane, and at production batch sizes the
+step is memory-bandwidth-bound on page-pool reads — the same traffic HASTILY
+pipelines away (PAPER.md §IV).  Verifying ``k`` extra drafted tokens in the
+same step re-reads no extra KV page per lane beyond the rows the drafts
+themselves add, so a correct draft turns one step into ``1 + accepted``
+committed tokens at almost the bandwidth of one.  The *draft* side needs no
+model at all to start paying off: production streams are self-similar
+(copying, templated answers, repeated queries), so a suffix match over
+tokens the engine has already seen predicts the next few tokens often
+enough to matter — prompt-lookup decoding, the zero-cost member of the
+speculative family (a small draft model slots into the same proposer seam
+later).
+
+A proposer is any callable ``(stream, k) -> drafts``:
+
+- ``stream`` — the lane's known tokens so far (prompt ⊕ generated), a 1-D
+  int array; the engine calls it only on decode lanes (cursor at the last
+  known token) and only for greedy requests (the acceptance rule is argmax
+  equality — see ``serving/core.py``);
+- ``k`` — the most tokens the scheduler can afford this step (its
+  ``spec_k`` knob, possibly degraded by the token budget);
+- ``drafts`` — up to ``k`` proposed next tokens (a sequence of ints; empty
+  means "no proposal", which costs the step nothing).
+
+Wrong drafts are *safe* — the verify step commits exactly the longest
+drafted prefix matching the model's own argmax and rolls the rest back —
+so proposers should answer whenever they have a plausible match and stay
+silent otherwise (a silent proposer makes the speculative engine
+byte-identical in work to the plain one).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+def _match_continuation(hay: np.ndarray, pattern: np.ndarray,
+                        k: int) -> Optional[np.ndarray]:
+    """Most recent occurrence of ``pattern`` in ``hay`` with a non-empty
+    continuation → up to ``k`` following tokens, else None.  Vectorised:
+    one rolling comparison per call, no python scan over positions."""
+    n = len(pattern)
+    if n == 0 or len(hay) <= n:
+        return None
+    # windows[i] == hay[i:i+n]; exclude the final window (no continuation)
+    wins = np.lib.stride_tricks.sliding_window_view(hay, n)[:-1]
+    hits = np.flatnonzero((wins == pattern[None, :]).all(axis=1))
+    if len(hits) == 0:
+        return None
+    i = int(hits[-1])                       # most recent occurrence
+    return hay[i + n:i + n + k]
+
+
+class NGramProposer:
+    """Prompt-lookup drafts: longest-suffix n-gram match, most recent first.
+
+    ``propose(stream, k)`` takes the stream's trailing ``n``-gram for
+    ``n = max_ngram .. min_ngram`` and returns the continuation of its most
+    recent *earlier* occurrence — in the lane's own stream first, then (if
+    ``history`` > 0) in recently finished streams the engine published via
+    :meth:`observe`.  History lookup is what makes repeated traffic
+    (identical or near-identical queries — the speculative analogue of the
+    shared-prefix cache) draft at near-total acceptance: the second serving
+    of a request drafts straight out of the first one's token stream.
+
+    Deterministic by construction: pure function of the streams it has
+    seen, no RNG — so speculative greedy decode stays reproducible.
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1,
+                 history: int = 0):
+        assert max_ngram >= min_ngram >= 1
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+        self.history = history
+        # insertion-ordered ring of finished streams, newest last
+        self._streams: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self.proposals = 0                  # telemetry: non-empty proposals
+        self.proposed_tokens = 0
+
+    # ------------------------------------------------------------- lookup
+    def propose(self, stream: Sequence[int], k: int) -> List[int]:
+        s = np.asarray(stream, np.int64)
+        if k <= 0 or len(s) < self.min_ngram:
+            return []
+        for n in range(min(self.max_ngram, len(s) - 0), self.min_ngram - 1,
+                       -1):
+            if n > len(s):
+                continue
+            pat = s[len(s) - n:]
+            out = _match_continuation(s, pat, k)
+            if out is None and self.history:
+                for hist in reversed(self._streams.values()):
+                    # a finished stream is all "earlier": match anywhere,
+                    # including its own tail
+                    wins = (np.lib.stride_tricks.sliding_window_view(hist, n)
+                            if len(hist) >= n else np.zeros((0, n), np.int64))
+                    hits = np.flatnonzero((wins == pat[None, :]).all(axis=1))
+                    cont = None
+                    for i in hits[::-1]:
+                        cont = hist[int(i) + n:int(i) + n + k]
+                        if len(cont):
+                            break
+                        cont = None
+                    if cont is not None:
+                        out = cont
+                        break
+            if out is not None and len(out):
+                out = [int(t) for t in out]
+                self.proposals += 1
+                self.proposed_tokens += len(out)
+                return out
+        return []
+
+    __call__ = propose
+
+    # ------------------------------------------------------------ history
+    def observe(self, stream: Sequence[int]) -> None:
+        """Publish a finished request's stream into the lookup history
+        (no-op unless ``history`` > 0; oldest streams fall off the ring)."""
+        if not self.history:
+            return
+        key = len(self._streams) and next(reversed(self._streams)) or 0
+        self._streams[key + 1] = np.asarray(stream, np.int64)
+        while len(self._streams) > self.history:
+            self._streams.popitem(last=False)
