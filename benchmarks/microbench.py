@@ -81,4 +81,146 @@ def bench_train_step() -> Iterator[Row]:
                                                   iters=3), "")
 
 
-ALL_MICRO = (bench_lut_exp, bench_attention, bench_int8, bench_train_step)
+def bench_paged_kernel() -> Iterator[Row]:
+    """Quick tiled-vs-untiled varlen A/B for the `run.py` table; the full
+    sweep (with bytes-moved estimates) lives in :func:`kernel_sweep`."""
+    from repro.kernels.autotune import (KernelConfig, KernelGeom,
+                                        measure_step_s)
+    geom = KernelGeom(hq=4, hkv=2, head_dim=32, page_size=8)
+    wl = {"prefill": [(32, 32)] * 4}
+    us_1 = measure_step_s(KernelConfig(block_q=1), geom, wl) * 1e6
+    us_8 = measure_step_s(KernelConfig(block_q=8), geom, wl) * 1e6
+    yield ("micro/varlen_untiled_4x32", us_1, "batch=T dataflow")
+    yield ("micro/varlen_tiled_bq8_4x32", us_8, f"untiled={us_1:.1f}us")
+
+
+ALL_MICRO = (bench_lut_exp, bench_attention, bench_int8, bench_paged_kernel,
+             bench_train_step)
+
+
+# --------------------------------------------------------------------------
+# paged-attention kernel sweep → BENCH_kernels.json
+# --------------------------------------------------------------------------
+
+def kernel_sweep(*, tiny: bool = False) -> dict:
+    """Sweep (tokens-per-lane × Bq × block_pages) over the varlen kernel.
+
+    Each cell pairs a *measured* step time with the roofline's bytes-moved
+    estimate for the same shapes, so the JSON records both what the
+    hardware did and what the model predicted it would do — the
+    tiled-vs-untiled KV-traffic reduction (~Bq× on prefill chunks) is
+    checkable from the estimates alone, timing noise aside.  Ends with an
+    autotune arm: the roofline-picked config round-tripped through the
+    on-disk table and timed against the hardcoded default.
+    """
+    import tempfile
+    from pathlib import Path
+
+    from repro.kernels.autotune import (DEFAULT_CONFIG, KernelConfig,
+                                        KernelGeom, measure_step_s,
+                                        predict_step_s, resolve_config,
+                                        save_config, tune)
+    from repro.perfmodel.model import (platform_spec,
+                                       varlen_attention_roofline,
+                                       varlen_attention_traffic)
+
+    lanes = 2 if tiny else 4
+    geom = (KernelGeom(hq=2, hkv=1, head_dim=16, page_size=4) if tiny
+            else KernelGeom(hq=8, hkv=2, head_dim=64, page_size=16))
+    tokens_per_lane = (1, 8) if tiny else (1, 8, 32)
+    bqs = (1, 4, 8) if tiny else (1, 4, 8, 16)
+    bps = (1, 2) if tiny else (1, 4)
+    spec = platform_spec(jax.default_backend())
+
+    rows = []
+    for tpl in tokens_per_lane:
+        segments = [(tpl, 2 * tpl + geom.page_size)] * lanes
+        wl = {"arm": segments}
+        for bq in bqs:
+            for bp in bps:
+                cfg = KernelConfig(block_q=bq, block_pages=bp)
+                traffic = varlen_attention_traffic(
+                    segments, block_q=bq, block_pages=bp,
+                    page_size=geom.page_size, hq=geom.hq, hkv=geom.hkv,
+                    head_dim=geom.head_dim)
+                rows.append({
+                    "tokens_per_lane": tpl, "block_q": bq, "block_pages": bp,
+                    "measured_us": measure_step_s(cfg, geom, wl) * 1e6,
+                    "predicted_us": varlen_attention_roofline(
+                        spec, traffic, block_pages=bp) * 1e6,
+                    "bytes_kv": traffic["bytes_kv"],
+                    "pages_read": traffic["pages_read"],
+                    "grid_steps": traffic["grid_steps"],
+                })
+
+    # Autotune arm: tune → save → load → same dispatch, then time tuned vs
+    # the hardcoded default on the mixed workload the tuner optimises for.
+    wl_mix = {"mixed": [(t, 2 * t + geom.page_size) for t in
+                        ([8, 1] if tiny else [32, 32, 1, 1])]}
+    tuned, report = tune(geom, workloads=wl_mix)
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "autotune.json"
+        save_config("microbench", jax.default_backend(), tuned, path=path)
+        loaded = resolve_config("microbench", jax.default_backend(),
+                                path=path)
+    roundtrip_ok = (loaded.block_q == tuned.block_q
+                    and loaded.block_pages == tuned.block_pages
+                    and loaded.dequant == tuned.dequant)
+    default_us = measure_step_s(DEFAULT_CONFIG, geom, wl_mix) * 1e6
+    tuned_us = measure_step_s(loaded, geom, wl_mix) * 1e6
+    # Predicted times are the deterministic half of the A/B: CI gates on
+    # them (tuned ≤ default by construction — the sweep covers the
+    # incumbent); measured wall-times are recorded for trends only.
+    pred_default_us = predict_step_s(DEFAULT_CONFIG, geom, wl_mix,
+                                     spec) * 1e6
+    pred_tuned_us = predict_step_s(loaded, geom, wl_mix, spec) * 1e6
+    return {
+        "platform": jax.default_backend(),
+        "tiny": tiny,
+        "geom": {"hq": geom.hq, "hkv": geom.hkv, "head_dim": geom.head_dim,
+                 "page_size": geom.page_size, "lanes": lanes},
+        "sweep": rows,
+        "autotune": {
+            "default": {**DEFAULT_CONFIG.describe(),
+                        "measured_us": default_us,
+                        "predicted_us": pred_default_us},
+            "tuned": {**loaded.describe(), "measured_us": tuned_us,
+                      "predicted_us": pred_tuned_us},
+            "roundtrip_ok": roundtrip_ok,
+            "candidates_scored": len(report),
+        },
+    }
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI scale: tiny shapes, reduced sweep axes")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the kernel sweep to PATH "
+                         "(e.g. BENCH_kernels.json)")
+    ap.add_argument("--skip-micro", action="store_true",
+                    help="only run the kernel sweep")
+    args = ap.parse_args(argv)
+
+    if not args.skip_micro:
+        for micro in ALL_MICRO:
+            for name, us, note in micro():
+                print(f"{name:40s} {us:10.1f} us   {note}")
+    result = kernel_sweep(tiny=args.tiny)
+    at = result["autotune"]
+    print(f"kernel sweep: {len(result['sweep'])} cells on "
+          f"{result['platform']}; tuned {at['tuned']['measured_us']:.1f}us "
+          f"vs default {at['default']['measured_us']:.1f}us "
+          f"(roundtrip_ok={at['roundtrip_ok']})")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

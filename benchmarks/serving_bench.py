@@ -225,6 +225,10 @@ def _engine_results(tiny: bool) -> Dict[str, Any]:
     padded["prefill_mode"] = ragged["prefill_mode"] = "chunked"
     slot["packing"], padded["packing"] = "slots", "padded"
     ragged["packing"] = "ragged"
+    # Resolved varlen-kernel block shapes (block_q / block_pages / source:
+    # tuned|default) — recorded so a bench regression is attributable to
+    # the kernel config that produced the number, not just the packing.
+    ragged["kernel_config"] = rag_eng.kernel_config.describe()
     return {"budget_rows": budget_rows, "page_size": page,
             "num_pages": num_pages, "max_len": max_len,
             "token_buckets": list(rag_eng.scheduler.token_buckets),
@@ -602,6 +606,9 @@ def _speculative_results(tiny: bool) -> Dict[str, Any]:
     return {"page_size": page, "lanes": lanes, "spec_k": spec_k,
             "num_pages": num_pages, "max_new": max_new,
             "proposer": "ngram(max_ngram=3, history=8)",
+            # All engines in this section resolve the same per-(model,
+            # platform) kernel config; recorded once for attributability.
+            "kernel_config": eng_s.kernel_config.describe(),
             "repetitive": arms["repetitive"],
             "adversarial": arms["adversarial"],
             "rejection": arms["rejection"]}
@@ -671,6 +678,7 @@ def _prefix_reuse_results(tiny: bool) -> Dict[str, Any]:
     hit_rate = (stats["hit_tokens"] - h0) / max(warm_known, 1)
 
     return {"page_size": page, "chunk_size": chunk, "num_pages": num_pages,
+            "kernel_config": eng.kernel_config.describe(),
             "shared_prefix_tokens": int(shared_len),
             "tail_tokens": int(tail_len), "warm_requests": n_warm,
             "cold_ttft_ms": cold_ms, "warm_ttft_ms": warm_ms,

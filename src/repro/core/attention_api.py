@@ -179,6 +179,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               kv_pos: Optional[jax.Array] = None,
               page_table: Optional[jax.Array] = None,
               q_pos: Optional[jax.Array] = None,
+              cu_seqlens: Optional[jax.Array] = None,
+              kernel_config: Optional[Any] = None,
               axis_name: Optional[str] = None,
               fallback: bool = False) -> jax.Array:
     """The single attention entry point (see module docstring).
@@ -201,7 +203,11 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     token stream ``(1, Hq, T, D)`` (lane segments abutting, no per-lane
     padding), ``page_table`` holds *per-token* rows ``(T, P)`` and
     ``q_pos`` (T,) is each token's absolute position — its causal bound.
-    Only the "paged_varlen" backend resolves ragged calls.
+    Only the "paged_varlen" backend resolves ragged calls.  ``cu_seqlens``
+    (S+1,) lane boundaries enable its q-block-tiled dataflow, whose block
+    shapes come from ``kernel_config`` (a ``kernels.autotune.KernelConfig``;
+    ``None`` consults the autotuner's active/persisted table — this is the
+    backend-resolution seam the roofline sweep feeds).
     """
     call = describe_call(q, k, q_offset=q_offset, kv_len=kv_len, kv_pos=kv_pos,
                          page_table=page_table, q_pos=q_pos,
@@ -214,6 +220,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         kw["page_table"] = page_table
     if q_pos is not None:
         kw["q_pos"] = q_pos
+        kw["cu_seqlens"] = cu_seqlens
+        kw["kernel_config"] = kernel_config
     if axis_name is not None:
         kw["axis_name"] = axis_name
     return spec.fn(q, k, v, **kw)
@@ -347,10 +355,13 @@ def _paged(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
     doc="Ragged (varlen) paged attention: q is one packed (1, Hq, T, D) "
         "token stream with per-token page-table rows (T, P) and per-token "
         "causal bounds q_pos (T,) — the token-level serving step, no "
-        "(lanes, C) padding.  Same page-block machinery as 'paged' at "
-        "batch = T (kernels/paged_attention/varlen.py).")
+        "(lanes, C) padding.  cu_seqlens lane boundaries switch on the "
+        "q-block-tiled dataflow (each KV page read once per block, not "
+        "once per token); block shapes come from the autotuner's "
+        "KernelConfig (kernels/paged_attention/varlen.py).")
 def _paged_varlen(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
-                  q_offset, kv_len, kv_pos, page_table, q_pos):
+                  q_offset, kv_len, kv_pos, page_table, q_pos,
+                  cu_seqlens=None, kernel_config=None):
     assert kv_pos is None, "ragged backend has no ring-buffer support"
     assert causal, "ragged paged streams are causal by construction"
     assert q.shape[0] == 1, \
@@ -358,10 +369,16 @@ def _paged_varlen(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
     # Positions live entirely in q_pos; kv_len/q_offset are the padded
     # convention's fields and block_k a streaming-scan tile size.
     del causal, q_offset, kv_len, block_k
+    from repro.kernels.autotune import active_config
     from repro.kernels.paged_attention import paged_attention_varlen
+    cfg = kernel_config if kernel_config is not None else active_config()
     qt = jnp.moveaxis(q[0], 1, 0)                       # (T, Hq, D)
     out = paged_attention_varlen(qt, k, v, page_table, q_pos, scale=scale,
-                                 cap=cap, window=window, exp_mode=exp_mode)
+                                 cap=cap, window=window, exp_mode=exp_mode,
+                                 cu_seqlens=cu_seqlens,
+                                 block_q=cfg.block_q,
+                                 block_pages=cfg.block_pages,
+                                 dequant=cfg.dequant)
     return jnp.moveaxis(out, 0, 1)[None]                # (1, Hq, T, D)
 
 

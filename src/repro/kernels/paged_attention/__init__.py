@@ -2,8 +2,8 @@ from repro.kernels.paged_attention.ops import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_reference
 from repro.kernels.paged_attention.varlen import (
     paged_attention_varlen, paged_attention_varlen_reference,
-    varlen_positions)
+    q_block_layout, validate_cu_seqlens, varlen_positions)
 
 __all__ = ["paged_attention", "paged_attention_reference",
            "paged_attention_varlen", "paged_attention_varlen_reference",
-           "varlen_positions"]
+           "q_block_layout", "validate_cu_seqlens", "varlen_positions"]

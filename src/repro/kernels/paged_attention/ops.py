@@ -32,6 +32,7 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     k_scale: Optional[jax.Array] = None,
                     v_scale: Optional[jax.Array] = None,
                     block_pages: Optional[int] = None,
+                    dequant: str = "block",
                     interpret: Optional[bool] = None) -> jax.Array:
     """Attention through the page table (no gathered cache view).
 
@@ -57,7 +58,7 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         return paged_attention_reference(
             q, k_pool, v_pool, page_table, kv_len, scale=float(scale),
             cap=cap, window=window, exp_mode=exp_mode, k_scale=k_scale,
-            v_scale=v_scale, block_pages=block_pages)
+            v_scale=v_scale, block_pages=block_pages, dequant=dequant)
     if interpret is False and not _use_kernel():
         raise ValueError(
             "paged_attention(interpret=False) forces the natively-compiled "
@@ -65,6 +66,8 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
             f"{jax.default_backend()!r}); pass interpret=True for interpret "
             "mode or interpret=None for the platform default")
 
+    # The Pallas kernel walks one page per grid step, so its dequant is
+    # inherently per-page; the `dequant` knob only shapes the jnp scan.
     from repro.kernels.paged_attention.kernel import paged_attention_4d
     g = hq // hkv
     out = paged_attention_4d(

@@ -61,7 +61,8 @@ def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
                               exp_mode: str = "lut",
                               k_scale: Optional[jax.Array] = None,
                               v_scale: Optional[jax.Array] = None,
-                              block_pages: Optional[int] = None) -> jax.Array:
+                              block_pages: Optional[int] = None,
+                              dequant: str = "block") -> jax.Array:
     """Attention through a page table: decode row or prefill chunk.
 
     q: (B, Hq, Lq, D) — query row ``i`` sits at absolute position
@@ -71,8 +72,15 @@ def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
     point anywhere valid — the causal/length mask drops them); kv_len: (B,)
     live rows per lane *including* the query chunk.  Optional
     k_scale/v_scale (N, Hkv, page_size) mark int8 pools (per-row dequant
-    scales).  Returns (B, Hq, Lq, D) in q's dtype.
+    scales).  ``dequant`` sets the scale-application granularity inside the
+    scan body — ``"block"`` multiplies the whole gathered block at once,
+    ``"page"`` multiplies page by page (numerically identical; the knob
+    exists so the autotuner can trade one wide multiply against page-sized
+    ones that fuse into the per-page DMA on real hardware).  Returns
+    (B, Hq, Lq, D) in q's dtype.
     """
+    if dequant not in ("block", "page"):
+        raise ValueError(f"dequant must be 'block' or 'page', got {dequant!r}")
     b, hq, lq, d = q.shape
     n, hkv, ps, dv = v_pool.shape
     assert hq % hkv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}"
@@ -108,8 +116,20 @@ def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
         k_blk = gather_block(k_pool, ids).astype(jnp.float32)
         v_blk = gather_block(v_pool, ids).astype(jnp.float32)
         if k_scale is not None:
-            k_blk = k_blk * gather_block(k_scale, ids)[..., None]
-            v_blk = v_blk * gather_block(v_scale, ids)[..., None]
+            ks = gather_block(k_scale, ids)                # (B, Hkv, bp*ps)
+            vs = gather_block(v_scale, ids)
+            if dequant == "page":
+                k_blk = jnp.concatenate(
+                    [k_blk[..., i * ps:(i + 1) * ps, :]
+                     * ks[..., i * ps:(i + 1) * ps, None]
+                     for i in range(bp)], axis=-2)
+                v_blk = jnp.concatenate(
+                    [v_blk[..., i * ps:(i + 1) * ps, :]
+                     * vs[..., i * ps:(i + 1) * ps, None]
+                     for i in range(bp)], axis=-2)
+            else:
+                k_blk = k_blk * ks[..., None]
+                v_blk = v_blk * vs[..., None]
         row = j * bp * ps + jnp.arange(bp * ps, dtype=jnp.int32)  # structural
         # Causal-within-chunk + length mask in one test: (B, Lq, bk).
         mask = row[None, None, :] <= q_pos[:, :, None]

@@ -11,29 +11,46 @@ tokens`` rows:
     q_pos        (T,)           each token's absolute position — which is
                                 also its causal bound: token t attends
                                 pool rows at positions ``0 .. q_pos[t]``
-    cu_seqlens   (S+1,)         optional lane boundaries (cumulative token
-                                counts); the kernel itself never needs them
-                                — causality and length live entirely in
-                                ``q_pos``/``token_pages`` — but callers use
-                                them to pack/unpack and tests to validate.
+    cu_seqlens   (S+1,)         lane boundaries (cumulative token counts);
+                                with ``block_q > 1`` this is a real compute
+                                input — it derives the q-block tiling below.
 
-The key identity: **varlen paged attention is paged decode at batch = T.**
-A packed token is exactly a one-row lane whose page table is its lane's row
-and whose live length is ``q_pos + 1`` — intra-chunk causality falls out
-because the chunk's KV rows are written to their pages *before* the attend
-(same order as the padded chunk step), and a token can never reach another
-lane's rows because its table row only names its own lane's pages.  So the
-same page-block online-softmax machinery (``ref.py`` off-TPU, the Pallas
-scalar-prefetch kernel on TPU, grid ``(token, kv_head, page_slot)``) serves
-both conventions; this module is the varlen entry point over it.
+Two dataflows share this entry point:
+
+**batch = T (untiled).**  The original identity: a packed token is exactly a
+one-row lane whose page table is its lane's row and whose live length is
+``q_pos + 1`` — paged decode at batch = T.  Correct, but a prefill chunk of
+L tokens in one lane reads that lane's KV pages **L times** (once per
+token-row of the grid).
+
+**q-block tiled (``block_q = Bq > 1``, needs ``cu_seqlens``).**  The packed
+stream is cut into q-blocks of up to ``Bq`` *contiguous same-lane* rows
+(lane boundaries from ``cu_seqlens`` — a block never straddles a lane).
+Each block becomes one lane of a ``(NB, Hq, Bq, D)`` chunked-prefill call:
+its page-table row is the lane's row, its ``kv_len`` is
+``q_pos[start] + Bq`` so kernel row ``i`` sits at position
+``q_pos[start] + i`` — exactly the packed positions, because serving packs
+each lane's chunk rows at contiguous ascending positions.  The grid becomes
+``(q_block, kv_head, page_slot)`` and each KV page is read **once per
+q-block instead of once per token** — ~Bq× less KV traffic on prefill
+chunks.  Outputs scatter back to stream order through a token→slot map.
+Block shapes (``block_q``, ``block_pages``, dequant granularity) are picked
+by ``kernels/autotune.py`` against the ``perfmodel`` roofline.
+
+Partial blocks carry dead tail rows (a lane whose chunk is not a multiple
+of Bq): they compute finite garbage at positions past the lane's live end
+and are never gathered back — same contract as the dead padding rows of the
+stream itself.  Dead *stream* rows (bucket padding past ``cu[-1]``) must be
+covered by a trailing pseudo-segment so ``cu[-1] == T`` (the scheduler does
+this); their blocks also produce unread garbage.
 
 INT8 pools and sliding windows thread straight through: per-row dequant
-scales ride the same per-token gather, and a window masks
-``q_pos - row < window`` per token.
+scales ride the same per-block gather, and a window masks
+``q_pos - row < window`` per row.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,9 +79,95 @@ def varlen_positions(cu_seqlens, seq_lens) -> np.ndarray:
     return pos
 
 
+def validate_cu_seqlens(cu_seqlens, t: int) -> jax.Array:
+    """Validate packed-stream lane boundaries against stream width ``t``.
+
+    Shape checks always apply.  Value checks (``cu[0] == 0``, monotone
+    non-decreasing, ``cu[-1] == t``) run eagerly on concrete inputs and
+    raise ``ValueError`` so packing bugs fail loudly instead of producing
+    garbage attention; traced values (inside jit) skip them — the serving
+    step validates at pack time on the host copy.
+
+    Dead padding rows (stream bucketed wider than the live tokens) must be
+    *covered* by the boundaries — append a trailing pseudo-segment ending at
+    ``t`` rather than stopping ``cu`` at the live width.
+    """
+    cu = jnp.asarray(cu_seqlens, jnp.int32)
+    if cu.ndim != 1 or cu.shape[0] < 2:
+        raise ValueError(
+            f"cu_seqlens must be 1-D with >= 2 entries, got shape {cu.shape}")
+    if not isinstance(cu, jax.core.Tracer):
+        host = np.asarray(cu)
+        if int(host[0]) != 0:
+            raise ValueError(f"cu_seqlens must start at 0, got {host[0]}")
+        if np.any(np.diff(host) < 0):
+            raise ValueError(
+                f"cu_seqlens must be non-decreasing, got {host.tolist()}")
+        if int(host[-1]) != t:
+            raise ValueError(
+                f"cu_seqlens[-1] = {int(host[-1])} must equal the packed "
+                f"stream width T = {t}; cover dead padding rows with a "
+                f"trailing pseudo-segment instead of truncating")
+    return cu
+
+
+def q_block_layout(cu: jax.Array, q_pos: jax.Array, t: int, bq: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Cut the packed stream into q-blocks of ``bq`` same-lane rows.
+
+    All shapes are static (``NB = t // bq + S`` is the worst-case block
+    count: ``Σ ceil(n_i/bq) ≤ floor(Σ n_i / bq) + S``); which blocks are
+    live is data.  Returns:
+
+    - ``rows``   (NB, bq) stream row gathered into each block slot (dead
+      slots clamped into range — they compute unread garbage);
+    - ``start``  (NB,)    first stream row of each block (clamped), which
+      carries the block's page-table row and base position;
+    - ``kv_len`` (NB,)    per-block kernel length ``q_pos[start] + bq`` so
+      kernel row ``i`` sits at position ``q_pos[start] + i`` (dead blocks
+      pinned to 1 to bound their page walk);
+    - ``slot``   (t,)     flattened block-output slot of each stream token
+      (the inverse map: ``out[t] = block_out.reshape(-1, ...)[slot[t]]``).
+    """
+    s = cu.shape[0] - 1
+    nb = t // bq + s
+    n = cu[1:] - cu[:-1]
+    nbi = (n + bq - 1) // bq
+    off = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                           jnp.cumsum(nbi).astype(jnp.int32)])
+    blk = jnp.arange(nb, dtype=jnp.int32)
+    lane = jnp.clip(jnp.searchsorted(off, blk, side="right") - 1, 0, s - 1)
+    start = cu[lane] + (blk - off[lane]) * bq
+    live = blk < off[-1]
+    rows = start[:, None] + jnp.arange(bq, dtype=jnp.int32)[None, :]
+    rows = jnp.clip(rows, 0, t - 1)
+    start = jnp.clip(start, 0, t - 1)
+    kv_len = jnp.where(live, q_pos[start] + bq, 1)
+    tok = jnp.arange(t, dtype=jnp.int32)
+    lane_t = jnp.clip(jnp.searchsorted(cu, tok, side="right") - 1, 0, s - 1)
+    within = tok - cu[lane_t]
+    slot = (off[lane_t] + within // bq) * bq + within % bq
+    slot = jnp.clip(slot, 0, nb * bq - 1)
+    return rows, start, kv_len, slot
+
+
 def _as_4d(q: jax.Array) -> jax.Array:
     t, hq, d = q.shape
     return q.reshape(t, hq, 1, d)
+
+
+def _tiled(q: jax.Array, token_pages: jax.Array, q_pos: jax.Array,
+           cu: jax.Array, bq: int, attend) -> jax.Array:
+    """Regather (T,)-stream → (NB, Hq, Bq, D) blocks, attend, scatter back."""
+    t, hq, d = q.shape
+    rows, start, kv_len, slot = q_block_layout(cu, q_pos, t, bq)
+    qb = jnp.take(q, rows.reshape(-1), axis=0)       # (NB*bq, Hq, D)
+    qb = qb.reshape(rows.shape[0], bq, hq, d)
+    qb = jnp.moveaxis(qb, 1, 2)                      # (NB, Hq, bq, D)
+    tbl = jnp.take(token_pages, start, axis=0)       # (NB, P)
+    out = attend(qb, tbl, kv_len)                    # (NB, Hq, bq, Dv)
+    flat = jnp.moveaxis(out, 2, 1).reshape(-1, hq, out.shape[-1])
+    return jnp.take(flat, slot, axis=0)              # (T, Hq, Dv)
 
 
 def paged_attention_varlen(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
@@ -76,28 +179,47 @@ def paged_attention_varlen(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            exp_mode: str = "lut",
                            k_scale: Optional[jax.Array] = None,
                            v_scale: Optional[jax.Array] = None,
+                           block_q: Optional[int] = None,
                            block_pages: Optional[int] = None,
+                           dequant: str = "block",
                            interpret: Optional[bool] = None) -> jax.Array:
     """Ragged paged attention over a packed (T,)-token stream → (T, Hq, D).
 
     q: (T, Hq, D); k_pool/v_pool: (N, Hkv, page_size, D) with
     ``Hq % Hkv == 0`` (GQA); token_pages: (T, P) per-token page-table rows;
-    q_pos: (T,) per-token absolute position / causal bound.  ``cu_seqlens``
-    is accepted for callers that carry it (validation, debugging) — the
-    computation depends only on the per-token arrays.  Dead rows (padding
-    the stream to its bucket width) carry an all-scratch table row and
-    ``q_pos = 0``; their output is garbage the caller never reads.
+    q_pos: (T,) per-token absolute position / causal bound.
 
-    Dispatch matches :func:`paged_attention`: Pallas kernel on TPU (grid
-    over tokens), jnp page-block scan elsewhere; ``interpret=True`` forces
-    the kernel in interpret mode.
+    ``block_q = Bq > 1`` with ``cu_seqlens`` selects the q-block-tiled
+    dataflow (module docstring): grid ``(q_block, kv_head, page_slot)``,
+    each KV page read once per block instead of once per token.  Tiling
+    additionally requires each lane's packed rows to sit at contiguous
+    ascending positions (``q_pos[i+1] = q_pos[i] + 1`` within a lane) —
+    the serving packing invariant.  ``block_q in (None, 1)`` or a missing
+    ``cu_seqlens`` keeps the batch = T dataflow.  ``cu_seqlens``, when
+    given, is validated (:func:`validate_cu_seqlens`) either way.
+
+    Dispatch matches :func:`paged_attention`: Pallas kernel on TPU (the
+    batch axis is tokens untiled, q-blocks tiled), jnp page-block scan
+    elsewhere; ``interpret=True`` forces the kernel in interpret mode.
+    ``dequant`` picks the int8 scale-application granularity in the scan
+    ("block" | "page" — numerically identical, structurally different).
     """
-    del cu_seqlens                       # packing metadata, not compute input
-    kv_len = jnp.asarray(q_pos, jnp.int32) + 1
+    t = q.shape[0]
+    cu = (validate_cu_seqlens(cu_seqlens, t)
+          if cu_seqlens is not None else None)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    kw = dict(scale=scale, cap=cap, window=window, exp_mode=exp_mode,
+              k_scale=k_scale, v_scale=v_scale, block_pages=block_pages,
+              dequant=dequant, interpret=interpret)
+    bq = None if block_q is None else int(min(block_q, max(t, 1)))
+    if cu is not None and bq is not None and bq > 1:
+        return _tiled(
+            q, token_pages, q_pos, cu, bq,
+            lambda qb, tbl, kv_len: paged_attention(
+                qb, k_pool, v_pool, tbl, kv_len, **kw))
+    kv_len = q_pos + 1
     out = paged_attention(_as_4d(q), k_pool, v_pool, token_pages, kv_len,
-                          scale=scale, cap=cap, window=window,
-                          exp_mode=exp_mode, k_scale=k_scale, v_scale=v_scale,
-                          block_pages=block_pages, interpret=interpret)
+                          **kw)
     return out[:, :, 0, :]
 
 
@@ -112,15 +234,27 @@ def paged_attention_varlen_reference(q: jax.Array, k_pool: jax.Array,
                                      exp_mode: str = "lut",
                                      k_scale: Optional[jax.Array] = None,
                                      v_scale: Optional[jax.Array] = None,
-                                     block_pages: Optional[int] = None
-                                     ) -> jax.Array:
+                                     block_q: Optional[int] = None,
+                                     block_pages: Optional[int] = None,
+                                     dequant: str = "block") -> jax.Array:
     """Pure-jnp varlen reference (the CPU/CI path), pinned explicitly —
-    same batch=T reduction as :func:`paged_attention_varlen` but always the
-    page-block scan, never the Pallas kernel."""
-    del cu_seqlens
-    kv_len = jnp.asarray(q_pos, jnp.int32) + 1
+    same reduction as :func:`paged_attention_varlen` (batch = T untiled,
+    q-block tiled when ``block_q > 1`` and ``cu_seqlens`` is given) but
+    always the page-block scan, never the Pallas kernel."""
+    t = q.shape[0]
+    cu = (validate_cu_seqlens(cu_seqlens, t)
+          if cu_seqlens is not None else None)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    kw = dict(scale=scale, cap=cap, window=window, exp_mode=exp_mode,
+              k_scale=k_scale, v_scale=v_scale, block_pages=block_pages,
+              dequant=dequant)
+    bq = None if block_q is None else int(min(block_q, max(t, 1)))
+    if cu is not None and bq is not None and bq > 1:
+        return _tiled(
+            q, token_pages, q_pos, cu, bq,
+            lambda qb, tbl, kv_len: paged_attention_reference(
+                qb, k_pool, v_pool, tbl, kv_len, **kw))
+    kv_len = q_pos + 1
     out = paged_attention_reference(
-        _as_4d(q), k_pool, v_pool, token_pages, kv_len, scale=scale, cap=cap,
-        window=window, exp_mode=exp_mode, k_scale=k_scale, v_scale=v_scale,
-        block_pages=block_pages)
+        _as_4d(q), k_pool, v_pool, token_pages, kv_len, **kw)
     return out[:, :, 0, :]

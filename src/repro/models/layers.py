@@ -166,6 +166,8 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                page_table: Optional[jax.Array] = None,
                q_len: Optional[jax.Array] = None,
                token_pages: Optional[jax.Array] = None,
+               cu_seqlens: Optional[jax.Array] = None,
+               kernel_config=None,
                xkv: Optional[jax.Array] = None,
                ) -> Tuple[jax.Array, Optional[Params]]:
     """One attention layer.
@@ -195,6 +197,10 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
     rows (stream padding to the bucket width) carry an all-scratch table
     row; their writes land on the scratch page, their outputs are garbage
     the caller never reads.
+    ``cu_seqlens``: (S+1,) ragged-stream lane boundaries — enables the
+    q-block-tiled varlen dataflow (each KV page read once per q-block);
+    ``kernel_config``: the autotuned ``KernelConfig`` block shapes (static;
+    ``None`` consults the autotuner's active config).
     ``xkv``: cross-attention source (encoder output); disables cache/rope-k.
     """
     b, l, _ = x.shape
@@ -284,16 +290,22 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                 paged_attention, paged_attention_varlen)
             attn_kw.update(k_scale=new_cache["ks"], v_scale=new_cache["vs"])
             if token_pages is not None:
+                from repro.kernels.autotune import active_config
+                kc = (kernel_config if kernel_config is not None
+                      else active_config())
                 out = paged_attention_varlen(
                     jnp.moveaxis(q[0], 1, 0), new_cache["k"], new_cache["v"],
-                    token_pages, p_tok, **attn_kw)      # (T, Hq, Dh)
+                    token_pages, p_tok, cu_seqlens=cu_seqlens,
+                    block_q=kc.block_q, block_pages=kc.block_pages,
+                    dequant=kc.dequant, **attn_kw)      # (T, Hq, Dh)
                 out = jnp.moveaxis(out, 0, 1)[None]     # (1, Hq, T, Dh)
             else:
                 out = paged_attention(q, new_cache["k"], new_cache["v"],
                                       page_table, kv_len, **attn_kw)
         else:
             new_cache = {"k": put(cache["k"], k), "v": put(cache["v"], v)}
-            conv = (dict(q_pos=p_tok, page_table=token_pages)
+            conv = (dict(q_pos=p_tok, page_table=token_pages,
+                         cu_seqlens=cu_seqlens, kernel_config=kernel_config)
                     if token_pages is not None
                     else dict(kv_len=kv_len, page_table=page_table))
             out = attention(q, new_cache["k"], new_cache["v"],

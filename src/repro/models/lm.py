@@ -74,7 +74,9 @@ def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
                  cache_index: Optional[jax.Array], causal: bool,
                  page_table: Optional[jax.Array] = None,
                  q_len: Optional[jax.Array] = None,
-                 token_pages: Optional[jax.Array] = None
+                 token_pages: Optional[jax.Array] = None,
+                 cu_seqlens: Optional[jax.Array] = None,
+                 kernel_config=None
                  ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     aux = jnp.zeros((), jnp.float32)
     if kind == "mamba":
@@ -86,7 +88,9 @@ def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
                                 kind=kind, pos=pos, causal=causal,
                                 cache=cache, cache_index=cache_index,
                                 page_table=page_table, q_len=q_len,
-                                token_pages=token_pages)
+                                token_pages=token_pages,
+                                cu_seqlens=cu_seqlens,
+                                kernel_config=kernel_config)
     if cfg.post_block_norm:
         a = L.norm_apply(cfg, p["ln1_post"], a)
     x = x + a
@@ -160,7 +164,9 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 cache_index: Optional[jax.Array] = None, causal: bool = True,
                 page_table: Optional[jax.Array] = None,
                 q_len: Optional[jax.Array] = None,
-                token_pages: Optional[jax.Array] = None
+                token_pages: Optional[jax.Array] = None,
+                cu_seqlens: Optional[jax.Array] = None,
+                kernel_config=None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     kinds, nper, tail = period_layout(cfg)
     shared = params.get("shared_attn")
@@ -184,7 +190,8 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 cache=None if pc is None else pc[str(i)],
                 cache_index=cache_index, causal=causal,
                 page_table=page_table, q_len=q_len,
-                token_pages=token_pages)
+                token_pages=token_pages, cu_seqlens=cu_seqlens,
+                kernel_config=kernel_config)
             if pc is not None:
                 new_c[str(i)] = lc
             aux = aux + a
@@ -219,7 +226,8 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 cache=None if caches is None else caches["tail"][i],
                 cache_index=cache_index, causal=causal,
                 page_table=page_table, q_len=q_len,
-                token_pages=token_pages)
+                token_pages=token_pages, cu_seqlens=cu_seqlens,
+                kernel_config=kernel_config)
             aux_total = aux_total + a
             new_caches["tail"].append(lc)
     return x, (new_caches if caches is not None else None), aux_total
@@ -376,7 +384,9 @@ def lm_prefill_chunk_paged(cfg: ModelConfig, params: Params,
 
 def lm_step_ragged(cfg: ModelConfig, params: Params, tokens: jax.Array,
                    caches: Params, token_pages: jax.Array, pos: jax.Array,
-                   last_idx: jax.Array) -> Tuple[jax.Array, Params]:
+                   last_idx: jax.Array,
+                   cu_seqlens: Optional[jax.Array] = None,
+                   kernel_config=None) -> Tuple[jax.Array, Params]:
     """The token-level (ragged) serving step: one packed ``(T,)`` stream.
 
     Where :func:`lm_prefill_chunk_paged` runs a right-aligned ``(lanes, C)``
@@ -402,12 +412,18 @@ def lm_step_ragged(cfg: ModelConfig, params: Params, tokens: jax.Array,
     argmax at every drafted position (the gather is still O(lanes · k)
     rows, never the (T, V) tensor, and there is no per-draft loop — the
     drafted rows ride the same packed stream).
+
+    ``cu_seqlens`` (S+1,) lane boundaries (dead padding rows covered by a
+    trailing pseudo-segment so ``cu[-1] == T``) switch the attention layers
+    to the q-block-tiled varlen dataflow; ``kernel_config`` (static) pins
+    the autotuned block shapes.
     """
     p_tok = jnp.asarray(pos, jnp.int32)
     x = L.embed_apply(cfg, params["embed"], tokens[None], p_tok[None])
     x, caches, _ = trunk_apply(cfg, params["trunk"], x, pos=p_tok[None],
                                caches=caches, cache_index=None, causal=True,
-                               token_pages=token_pages)
+                               token_pages=token_pages, cu_seqlens=cu_seqlens,
+                               kernel_config=kernel_config)
     x = L.norm_apply(cfg, params["final_norm"], x)
     # (lanes,) gather BEFORE unembedding: the (T, V) logits tensor would be
     # the largest activation of the step; only lanes' last rows are needed.

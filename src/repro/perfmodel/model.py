@@ -200,6 +200,98 @@ def tops_per_watt(hw: Hardware, n_layers: int, l: int, d: int, d_ff: int,
 
 
 # --------------------------------------------------------------------------
+# kernel roofline: q-block-tiled varlen paged attention
+# --------------------------------------------------------------------------
+#
+# The serving-kernel analogue of the figures above: instead of crossbar
+# stages, a bytes-moved/FLOPs roofline over the page-walk grid that
+# ``kernels/autotune.py`` scores tile candidates against.  One varlen step
+# is a set of lane segments (n_new tokens landing on kv_len live rows);
+# tiling with q-blocks of Bq rows turns "read each page once per token"
+# into "once per block" — the model counts exactly that.
+
+@dataclasses.dataclass(frozen=True)
+class PlatformSpec:
+    """Roofline constants of the machine running the *serving kernels*.
+
+    Not Table II — the jnp scan / Pallas kernel run on a host CPU or a TPU,
+    and the tuner needs their balance point, not HASTILY's.  Numbers are
+    order-of-magnitude (a tile choice flips on ratios, not absolutes).
+    """
+    name: str
+    mem_bw_gbs: float        # sustained bytes/s feeding the kernel
+    flops: float             # peak f32 FLOP/s
+    dispatch_ns: float       # fixed cost per page-walk grid step
+    dequant_page_ns: float   # extra per-page cost of page-granular dequant
+
+
+PLATFORMS: Dict[str, PlatformSpec] = {
+    # host CPU running the jnp page-block scan (XLA:CPU, ~1 socket)
+    "cpu": PlatformSpec("cpu", mem_bw_gbs=40.0, flops=2e11,
+                        dispatch_ns=400.0, dequant_page_ns=200.0),
+    # one TPU core running the Pallas scalar-prefetch kernel; per-page
+    # dequant is free there (the kernel walks one page per step anyway)
+    "tpu": PlatformSpec("tpu", mem_bw_gbs=1.2e3, flops=2e14,
+                        dispatch_ns=120.0, dequant_page_ns=0.0),
+}
+
+
+def platform_spec(name: str | None = None) -> PlatformSpec:
+    return PLATFORMS.get(name or "", PLATFORMS["cpu"])
+
+
+def varlen_attention_traffic(segments, *, block_q: int, block_pages: int,
+                             page_size: int, hq: int, hkv: int, head_dim: int,
+                             kv_bytes: int = 4,
+                             scaled: bool = False) -> Dict[str, float]:
+    """Bytes moved / FLOPs / grid steps of one tiled varlen step.
+
+    ``segments``: iterable of ``(n_new, kv_len)`` lane chunks (kv_len counts
+    the new rows).  ``block_q = 1`` is the untiled batch = T dataflow.  KV
+    bytes dominate: every q-block walks its lane's live pages, so pages are
+    read ``ceil(n/Bq)`` times per lane instead of ``n`` — the tiling win the
+    autotuner is shopping for.  ``scaled`` adds the int8 dequant-scale
+    planes (4 bytes/row alongside ``kv_bytes``/elem rows).
+    """
+    bq = max(1, int(block_q))
+    bp = max(1, int(block_pages))
+    row_bytes = 2 * head_dim * kv_bytes * hkv        # K + V, all kv heads
+    if scaled:
+        row_bytes += 2 * 4 * hkv                     # k_scale + v_scale rows
+    bytes_kv = bytes_q = flops = steps = pages = 0.0
+    for n_new, kv_len in segments:
+        n_new = int(n_new)
+        kv_len = int(kv_len)
+        if n_new <= 0:
+            continue
+        nb = -(-n_new // bq)
+        for j in range(nb):
+            rows = min(bq, n_new - j * bq)
+            kv_blk = kv_len - n_new + j * bq + rows  # block's causal horizon
+            p_live = -(-kv_blk // page_size)
+            pages += p_live
+            bytes_kv += p_live * page_size * row_bytes
+            bytes_q += 2 * rows * hq * head_dim * 4  # q read + out write
+            flops += 4.0 * rows * (p_live * page_size) * hq * head_dim
+            steps += -(-p_live // bp)
+    return {"bytes_kv": bytes_kv, "bytes_q": bytes_q, "flops": flops,
+            "grid_steps": steps, "pages_read": pages,
+            "bytes_total": bytes_kv + bytes_q}
+
+
+def varlen_attention_roofline(spec: PlatformSpec, traffic: Dict[str, float],
+                              *, block_pages: int = 1,
+                              dequant: str = "block") -> float:
+    """Predicted step seconds: max(bytes/BW, flops/peak) + grid overheads."""
+    t_mem = traffic["bytes_total"] / (spec.mem_bw_gbs * 1e9)
+    t_cmp = traffic["flops"] / spec.flops
+    t_grid = traffic["grid_steps"] * spec.dispatch_ns * 1e-9
+    if dequant == "page" and block_pages > 1:
+        t_grid += traffic["pages_read"] * spec.dequant_page_ns * 1e-9
+    return max(t_mem, t_cmp) + t_grid
+
+
+# --------------------------------------------------------------------------
 # headline claim summary (used by benchmarks + tests)
 # --------------------------------------------------------------------------
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -89,6 +89,12 @@ class StepOutput:
     # accepted-tokens-per-step metric.
     drafted_tokens: int = 0
     accepted_tokens: int = 0
+    # Resolved varlen-kernel block shapes the ragged step ran with (the
+    # autotuner's ``KernelConfig.describe()`` dict: block_q, block_pages,
+    # dequant, source ∈ {"default", "tuned"}) — recorded per step so bench
+    # regressions are attributable to the config that produced them.  None
+    # for the padded oracle mode.
+    kernel_config: Optional[Dict[str, Any]] = None
 
     @property
     def mixed(self) -> bool:

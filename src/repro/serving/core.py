@@ -16,11 +16,16 @@ scheduler, and one jitted step function per packing mode:
   prefill chunk costs ~67 token-rows of compute — not 4 × 64, which is
   what the padded block pays.  Every scheduled row is (almost always) live
   work: the paper's never-stall-on-padding pipelining (PAPER.md §IV)
-  applied to the serving batch itself.  Steps with *no* raggedness —
-  every lane streaming exactly the step width (all-lane decode, all-lane
-  full chunks) — dispatch to the padded block below instead: there is no
-  padding to remove, and the block form reads each KV page once per chunk
-  where the varlen kernel reads it once per token.
+  applied to the serving batch itself.  The stream's lane boundaries
+  (``cu_seqlens``, dead padding rows covered by a trailing pseudo-segment)
+  ride into the step as a real compute input: the varlen kernel tiles the
+  stream into q-blocks of ``block_q`` same-lane rows, so a prefill chunk
+  reads each KV page once per *block*, not once per token — full-width
+  steps need no padded-block special case anymore (that dispatch is
+  retired; ``mode="padded"`` survives only as the equivalence oracle).
+  Block shapes come from the kernel autotuner's per-(model, platform)
+  table (``kernels/autotune.py``), resolved once at engine construction
+  and recorded in every ``StepOutput``.
 
 - ``mode="padded"`` — the PR-3 right-aligned ``(lanes, C)`` block
 
@@ -116,7 +121,7 @@ class EngineCore:
                  prefix_cache: bool = False,
                  cache_pages: Optional[int] = None, seed: int = 0,
                  speculative: bool = False, spec_k: int = 4,
-                 proposer: Any = None):
+                 proposer: Any = None, kernel_config: Any = None):
         if mode not in ("ragged", "padded"):
             raise ValueError(f"unknown EngineCore mode {mode!r}; "
                              f"expected 'ragged' or 'padded'")
@@ -167,6 +172,14 @@ class EngineCore:
                                    prefix_cache=self.prefix_cache,
                                    spec_k=self.spec_k,
                                    proposer=self.proposer)
+        # Varlen-kernel block shapes: explicit override, else the
+        # autotuner's persisted per-(model, platform) table, else the
+        # hardcoded default.  Static for the engine's lifetime — the jitted
+        # ragged step closes over it, so swapping configs means a new
+        # engine (per-engine jit caches keep old traces from leaking).
+        from repro.kernels.autotune import resolve_config
+        self.kernel_config = (kernel_config if kernel_config is not None
+                              else resolve_config(cfg.name))
         self.chunk_size = chunk_size
         self.key = jax.random.PRNGKey(seed)
         self.finished: List[Request] = []
@@ -182,10 +195,12 @@ class EngineCore:
             return m.prefill_chunk_paged(params, toks, pool, tbl,
                                          kv_len, q_len)
 
-        def ragged_fn(params, pool, token_pages, toks, pos, last_idx):
+        kc = self.kernel_config
+
+        def ragged_fn(params, pool, token_pages, toks, pos, last_idx, cu):
             self.trace_count += 1       # python side effect: counts traces
             return m.step_ragged(params, toks, pool, token_pages, pos,
-                                 last_idx)
+                                 last_idx, cu_seqlens=cu, kernel_config=kc)
 
         # donated pool: every layer's row writes update in place instead of
         # copying the whole pool each step.
@@ -220,27 +235,19 @@ class EngineCore:
         return self._run_block(plans, preempted)
 
     def _step_ragged(self) -> StepOutput:
-        """The token-level step (default mode): packed stream, with
-        full-width steps dispatched to the padded block.
+        """The token-level step (default mode): one packed stream, always.
 
-        A step whose every lane streams exactly the step width (all-lanes
-        decode, or all-lanes full prefill chunks) has no padding for the
-        ragged packing to remove — and the block form reads each KV page
-        once per *chunk* where the varlen kernel reads it once per *token*.
-        So the engine packs ragged exactly where raggedness exists (mixed
-        phases, partial chunks, idle lanes) and keeps the block's page
-        reuse where it doesn't.  Token streams are identical either way.
+        Full-width steps (all-lanes decode, all-lanes full prefill chunks)
+        used to dispatch to the padded block because the varlen kernel read
+        each KV page once per *token* where the block form read it once per
+        chunk.  The q-block-tiled varlen dataflow closed that gap — each
+        page is read once per ``block_q`` rows regardless of how ragged the
+        step is — so every ragged step now runs the one varlen kernel and
+        the padded block survives only as ``mode="padded"``, the
+        equivalence oracle.  Token streams are identical either way.
         """
         s = self.scheduler
         wants = s.begin_step()
-        c = 1 if all(q == 1 for q in wants.values()) else self.chunk_size
-        if wants and len(wants) == self.lanes and not s.drafting and \
-                all(q == c for q in wants.values()):
-            # Full-width non-drafting steps go to the padded block; a step
-            # carrying drafts never does — the block extracts last-row
-            # logits only, the verify needs every drafted position's.
-            plans, preempted = s.plans_for(wants)
-            return self._run_block(plans, preempted)
         batch, preempted = s.batch_for(wants)
         return self._run_stream(batch, preempted)
 
@@ -300,10 +307,17 @@ class EngineCore:
             last_idx = np.zeros((self.lanes,), np.int32)
             last_idx[:len(plans)] = batch.cu_seqlens[1:] - 1
 
+        # Lane boundaries as a compute input, static (lanes + 2,) shape:
+        # the live plans' boundaries, then the bucket's dead padding rows
+        # as one trailing pseudo-segment ending at T (so cu[-1] == T — the
+        # kernel's validated packing contract), then zero-width repeats.
+        cu = np.full((self.lanes + 2,), batch.width, np.int32)
+        cu[:len(batch.cu_seqlens)] = batch.cu_seqlens
+
         logits, self.kv.pool = self._ragged(
             self.params, self.kv.pool, jnp.asarray(batch.table),
             jnp.asarray(batch.tokens), jnp.asarray(batch.pos),
-            jnp.asarray(last_idx))
+            jnp.asarray(last_idx), jnp.asarray(cu))
         return self._finish(plans, logits, preempted,
                             live=batch.live, padded=batch.width)
 
@@ -383,7 +397,9 @@ class EngineCore:
                           live_rows=live, padded_rows=padded,
                           prefix_hit_tokens=(
                               self.scheduler.prefix_hit_tokens_step),
-                          drafted_tokens=drafted, accepted_tokens=accepted)
+                          drafted_tokens=drafted, accepted_tokens=accepted,
+                          kernel_config=(self.kernel_config.describe()
+                                         if self.mode == "ragged" else None))
 
     def run(self, max_steps: int = 100_000) -> List[Request]:
         steps = 0

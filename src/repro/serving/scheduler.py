@@ -472,10 +472,11 @@ class Scheduler:
         """Admit waiters and split the token budget → ticket → q_len wants.
 
         The two-phase API lets the engine pick the packing *after* seeing
-        the plan (the ragged engine runs full-width steps as padded blocks
-        — no padding to remove, and the block form reads each KV page once
-        per chunk instead of once per token): ``begin_step()`` then exactly
-        one of :meth:`plans_for` / :meth:`batch_for`."""
+        the plan: ``begin_step()`` then exactly one of :meth:`plans_for` /
+        :meth:`batch_for`.  (The ragged engine used to route full-width
+        steps through padded-block plans for their per-chunk page reuse;
+        the q-block-tiled varlen kernel made that dispatch unnecessary, so
+        only ``mode="padded"`` — the oracle — takes the plans path now.)"""
         self._evicted_now = []
         self.prefix_hit_tokens_step = 0
         self._drafts = {}

@@ -352,11 +352,12 @@ def test_ragged_graph_has_no_padded_intermediate():
     eng = EngineCore(cfg, params, lanes=lanes, page_size=ps, num_pages=32,
                      chunk_size=chunk)
     t, pw = 48, 4                       # 3 decodes + a 45-token chunk share
+    cu = jnp.asarray([0, 1, 2, 48, 48], jnp.int32)      # (lanes + 2,)
     jaxpr = jax.make_jaxpr(eng._ragged)(
         eng.params, eng.kv.pool,
         jnp.full((t, pw), eng.kv.scratch, jnp.int32),
         jnp.zeros((t,), jnp.int32), jnp.zeros((t,), jnp.int32),
-        jnp.zeros((lanes,), jnp.int32))
+        jnp.zeros((lanes,), jnp.int32), cu)
 
     def padded_pairs(shapes):
         return [s for s in shapes

@@ -4,6 +4,7 @@ lane, at each token's own causal bound) and the padded-paged chunk kernel
 (the PR-3 step the ragged path replaces) — over ragged per-lane lengths,
 GQA ratios, int8 pools and shuffled page tables; plus the ragged calling
 convention through the attention-API registry."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -19,6 +20,8 @@ from repro.core.streaming_attention import quantize_kv_rows
 from repro.kernels.paged_attention import (paged_attention,
                                            paged_attention_varlen,
                                            paged_attention_varlen_reference,
+                                           q_block_layout,
+                                           validate_cu_seqlens,
                                            varlen_positions)
 
 
@@ -223,6 +226,217 @@ def test_dead_rows_are_isolated(rng):
         q2, kp, vp, tbl2, pos2))
     np.testing.assert_allclose(both[:t], live, atol=0, rtol=0)
     assert np.isfinite(both[t:]).all()
+
+
+# ---------------------------------------------------------- q-block tiling --
+
+def _decode_and_straddle_stream(rng, *, hq, hkv, d, ps, p, n):
+    """A stream built to exercise the tiling edge cases: single-token decode
+    lanes between prefill chunks, and chunk lengths chosen so lanes straddle
+    q-block boundaries for every Bq in the test matrix."""
+    nq = np.array([1, 5, 1, 7, 3])                        # decode + straddle
+    lanes = len(nq)
+    lens = np.array([int(rng.integers(nq[i], p * ps + 1))
+                     for i in range(lanes)])
+    cu = np.concatenate([[0], np.cumsum(nq)]).astype(np.int32)
+    t = int(cu[-1])
+    lane_tbl = np.stack([rng.permutation(n)[:p] for _ in range(lanes)])
+    q = jnp.asarray(rng.normal(size=(t, hq, d)).astype(np.float32))
+    q_pos = jnp.asarray(varlen_positions(cu, lens))
+    token_tbl = jnp.asarray(lane_tbl[np.repeat(np.arange(lanes), nq)],
+                            jnp.int32)
+    return q, token_tbl, q_pos, cu
+
+
+@pytest.mark.parametrize("block_q", [2, 3, 4, 8, 64])
+@pytest.mark.parametrize("quant", [False, True])
+def test_tiled_matches_untiled(rng, block_q, quant):
+    """The q-block-tiled dataflow is a pure layout change: for every Bq
+    (straddling lanes, single-token decode lanes, Bq > T) and both pool
+    dtypes it reproduces the batch = T reference bit-for-bit-close —
+    window + softcap riding along."""
+    hq, hkv, d, ps, p = 4, 2, 16, 8, 3
+    n = 16
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu = _decode_and_straddle_stream(
+        rng, hq=hq, hkv=hkv, d=d, ps=ps, p=p, n=n)
+    kw = dict(window=5, cap=20.0)
+    if quant:
+        def q8(pool):
+            qv, s = quantize_kv_rows(pool.reshape(1, n * hkv, ps, d))
+            return qv.reshape(n, hkv, ps, d), s.reshape(n, hkv, ps)
+        kp, ks = q8(kp)
+        vp, vs = q8(vp)
+        kw.update(k_scale=ks, v_scale=vs)
+
+    want = np.asarray(paged_attention_varlen_reference(
+        q, kp, vp, token_tbl, q_pos, **kw))
+    got = np.asarray(paged_attention_varlen_reference(
+        q, kp, vp, token_tbl, q_pos, cu_seqlens=cu, block_q=block_q, **kw))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4),              # GQA group size
+       st.integers(1, 4),              # lanes
+       st.sampled_from([2, 3, 8]),     # Bq
+       st.integers(0, 10_000))
+def test_tiled_matches_contiguous_oracle(group, lanes, block_q, seed):
+    """Tiled varlen == the contiguous per-lane oracle on random ragged
+    streams (shuffled tables, ragged chunk and live lengths, every GQA
+    packing) — the same bar the untiled path passes."""
+    rng = np.random.default_rng(seed)
+    hkv, d, ps, p = 2, 16, 4, 3
+    hq = hkv * group
+    n = p * lanes + 1
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu, lane_tbl, lens, _ = make_stream(
+        rng, lanes=lanes, hq=hq, d=d, ps=ps, p=p, n=n)
+
+    got = np.asarray(paged_attention_varlen_reference(
+        q, kp, vp, token_tbl, q_pos, cu_seqlens=cu, block_q=block_q,
+        exp_mode="lut"))
+    want = contiguous_oracle("jnp", q, cu, lane_tbl, lens, kp, vp)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+def test_tiled_kernel_interpret_matches_reference(rng):
+    """The Pallas kernel under q-block tiling (grid (q_block, kv_head,
+    page_slot), interpret mode) == the untiled jnp reference."""
+    hq, hkv, d, ps, p = 4, 2, 16, 8, 3
+    n = 16
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu = _decode_and_straddle_stream(
+        rng, hq=hq, hkv=hkv, d=d, ps=ps, p=p, n=n)
+
+    ref = paged_attention_varlen_reference(q, kp, vp, token_tbl, q_pos)
+    ker = paged_attention_varlen(q, kp, vp, token_tbl, q_pos,
+                                 cu_seqlens=cu, block_q=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_tiled_dequant_page_matches_block(rng):
+    """`dequant="page"` is the same numbers as `dequant="block"` — the knob
+    changes the multiply granularity, never a value."""
+    hq, hkv, d, ps, p = 4, 2, 16, 4, 4
+    n = 16
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    q, token_tbl, q_pos, cu = _decode_and_straddle_stream(
+        rng, hq=hq, hkv=hkv, d=d, ps=ps, p=p, n=n)
+
+    def q8(pool):
+        qv, s = quantize_kv_rows(pool.reshape(1, n * hkv, ps, d))
+        return qv.reshape(n, hkv, ps, d), s.reshape(n, hkv, ps)
+    kq, ks = q8(kp)
+    vq, vs = q8(vp)
+    outs = [np.asarray(paged_attention_varlen_reference(
+        q, kq, vq, token_tbl, q_pos, k_scale=ks, v_scale=vs,
+        cu_seqlens=cu, block_q=4, block_pages=2, dequant=dq))
+        for dq in ("block", "page")]
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-6, rtol=1e-6)
+    with pytest.raises(ValueError, match="dequant"):
+        paged_attention_varlen_reference(
+            q, kq, vq, token_tbl, q_pos, k_scale=ks, v_scale=vs,
+            dequant="nope")
+
+
+def test_q_block_layout_roundtrip():
+    """Layout invariants: every live block holds contiguous same-lane rows,
+    kv_len puts kernel row i at the token's own position, and `slot` is the
+    exact inverse map (gather(blocks)[slot] == identity on live tokens)."""
+    cu = np.array([0, 1, 6, 7, 14, 17], np.int32)         # nq = 1,5,1,7,3
+    lens = np.array([9, 5, 31, 12, 3])
+    t, bq = int(cu[-1]), 4
+    q_pos = jnp.asarray(varlen_positions(cu, lens))
+    rows, start, kv_len, slot = map(np.asarray,
+                                    q_block_layout(jnp.asarray(cu), q_pos,
+                                                   t, bq))
+    s = len(cu) - 1
+    assert rows.shape == (t // bq + s, bq)
+    live_blocks = int(sum(-(-int(n) // bq) for n in np.diff(cu)))
+    # per-lane: blocks tile the segment in order, bq rows at a time
+    b = 0
+    for i in range(s):
+        n = int(cu[i + 1] - cu[i])
+        for j in range(-(-n // bq)):
+            assert start[b] == cu[i] + j * bq
+            want = np.clip(np.arange(start[b], start[b] + bq), 0, t - 1)
+            np.testing.assert_array_equal(rows[b], want)
+            assert kv_len[b] == int(q_pos[start[b]]) + bq
+            b += 1
+    assert b == live_blocks
+    assert (kv_len[live_blocks:] == 1).all()              # dead blocks pinned
+    # inverse map: scattering block-major data back is the identity
+    flat = rows.reshape(-1)
+    np.testing.assert_array_equal(flat[slot], np.arange(t))
+
+
+def test_validate_cu_seqlens_raises():
+    with pytest.raises(ValueError, match="start at 0"):
+        validate_cu_seqlens(np.array([1, 4], np.int32), 4)
+    with pytest.raises(ValueError, match="non-decreasing"):
+        validate_cu_seqlens(np.array([0, 5, 3, 8], np.int32), 8)
+    with pytest.raises(ValueError, match="pseudo-segment"):
+        validate_cu_seqlens(np.array([0, 3, 6], np.int32), 8)
+    with pytest.raises(ValueError, match="1-D"):
+        validate_cu_seqlens(np.array([0], np.int32), 0)
+    validate_cu_seqlens(np.array([0, 3, 8], np.int32), 8)  # ok
+    # traced boundaries skip value checks (serving validates on the host
+    # copy at pack time) but still trace through
+    out = jax.jit(lambda c: validate_cu_seqlens(c, 8))(
+        jnp.asarray([0, 3, 8], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), [0, 3, 8])
+
+
+def _pool_gather_rows(jaxpr, pool_shape):
+    """Total rows gathered from pool-shaped operands anywhere in the graph
+    (scan bodies included) — the structural KV-traffic count."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "gather" and \
+                tuple(eqn.invars[0].aval.shape) == pool_shape:
+            total += int(np.prod(eqn.invars[1].aval.shape[:-1]))
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else [val]
+            for v in vals:
+                if isinstance(v, jax.core.ClosedJaxpr):
+                    total += _pool_gather_rows(v.jaxpr, pool_shape)
+                elif isinstance(v, jax.core.Jaxpr):
+                    total += _pool_gather_rows(v, pool_shape)
+    return total
+
+
+def test_tiled_page_gathers_scale_with_block_count(rng):
+    """Structure, not timing: the traced tiled graph gathers KV pages
+    O(T/Bq) times per page-block scan step where the untiled graph gathers
+    O(T) — exactly proportional to the q-block count NB = T//Bq + S."""
+    hq, hkv, d, ps, p = 4, 2, 16, 8, 3
+    n, bq = 16, 8
+    kp, vp = make_pool(rng, n, hkv, ps, d)
+    nq = np.array([1, 13, 10])                            # T = 24
+    lanes = len(nq)
+    cu = np.concatenate([[0], np.cumsum(nq)]).astype(np.int32)
+    t = int(cu[-1])
+    lane_tbl = np.stack([rng.permutation(n)[:p] for _ in range(lanes)])
+    token_tbl = jnp.asarray(lane_tbl[np.repeat(np.arange(lanes), nq)],
+                            jnp.int32)
+    q_pos = jnp.asarray(varlen_positions(
+        cu, np.array([20, 13, 15])))
+    q = jnp.asarray(rng.normal(size=(t, hq, d)).astype(np.float32))
+
+    pool_shape = tuple(kp.shape)
+    untiled = jax.make_jaxpr(lambda a: paged_attention_varlen_reference(
+        a, kp, vp, token_tbl, q_pos))(q)
+    tiled = jax.make_jaxpr(lambda a: paged_attention_varlen_reference(
+        a, kp, vp, token_tbl, q_pos, cu_seqlens=cu, block_q=bq))(q)
+    rows_u = _pool_gather_rows(untiled.jaxpr, pool_shape)
+    rows_t = _pool_gather_rows(tiled.jaxpr, pool_shape)
+    nb = t // bq + lanes                                  # 3 + 3
+    assert rows_u > 0 and rows_t > 0
+    assert rows_t < rows_u
+    # exact proportionality: same scan skeleton, batch T vs batch NB
+    assert rows_t * t == rows_u * nb, (rows_t, rows_u, t, nb)
 
 
 # --------------------------------------------------------------- registry --

@@ -538,10 +538,13 @@ def test_verify_graph_is_one_varlen_attend():
     args = (eng.params, eng.kv.pool,
             jnp.full((t, pw), eng.kv.scratch, jnp.int32),
             jnp.zeros((t,), jnp.int32), jnp.zeros((t,), jnp.int32))
+    # lane boundaries in the serving (lanes + 2,) convention: 3 lanes with
+    # 1 + k rows each, then the trailing pseudo-segment ending at T
+    cu = jnp.asarray([0, 5, 10, 15, t, t], jnp.int32)
     spec_jaxpr = jax.make_jaxpr(eng._ragged)(
-        *args, jnp.zeros((lanes, k + 1), jnp.int32))
+        *args, jnp.zeros((lanes, k + 1), jnp.int32), cu)
     plain_jaxpr = jax.make_jaxpr(eng._ragged)(
-        *args, jnp.zeros((lanes,), jnp.int32))
+        *args, jnp.zeros((lanes,), jnp.int32), cu)
 
     spec_c, plain_c = (_prim_counts(j.jaxpr)
                        for j in (spec_jaxpr, plain_jaxpr))
