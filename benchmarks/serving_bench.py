@@ -1,6 +1,6 @@
 """Serving benchmarks: engines, decode A/B, prefill TTFT, prefix reuse.
 
-Five families, all emitted as CSV rows (``benchmarks.run``) *and* as a
+Six families, all emitted as CSV rows (``benchmarks.run``) *and* as a
 machine-readable ``BENCH_serving.json`` so the perf trajectory is tracked
 across PRs:
 
@@ -60,6 +60,17 @@ across PRs:
    warm phase — deterministic, not a timing), `pages_shared` grants and
    CoW-copy counts from the cache's own telemetry.  The nightly CI job
    asserts `prefix_hit_rate ≥ 0.9` and warm-over-cold TTFT speedup > 1.
+
+6. **Serve loop** — the async front door (PR 8) vs the batch driver on
+   the SAME warm engine.  The batch arm submits everything at t=0 and
+   steps to drain — its TTFT tail is the admission queue.  The stream arm
+   replays the same traffic through :class:`AsyncLMServer` under Poisson
+   arrivals whose rate is *self-calibrated* to 70% of what the batch arm
+   just sustained (the classic sustained-utilization point — offering
+   100% is a knife edge where backlog, not the server, sets TTFT),
+   measuring per-client TTFT/TPOT from each request's own arrival.  Nightly CI asserts the
+   streaming TTFT p50 ≤ the batch driver's (spreading arrivals over the
+   window the engine needs anyway must not cost first-token latency).
 
 CPU numbers are relative A/B signals, not TPU claims (docs/benchmarks.md).
 """
@@ -692,6 +703,139 @@ def _prefix_reuse_results(tiny: bool) -> Dict[str, Any]:
             "evicted_pages": int(stats["evicted_pages"])}
 
 
+# --------------------------------------------------------------- serve loop --
+
+def _serve_traffic(vocab: int, n: int, max_new: int, seed: int):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, max_new=max_new,
+                    prompt=rng.integers(0, vocab, int(rng.integers(4, 24))
+                                        ).astype(np.int32))
+            for i in range(n)]
+
+
+def _serve_loop_results(tiny: bool) -> Dict[str, Any]:
+    """Async streaming front door vs the batch driver, one warm engine.
+
+    Arm 1 (``batch``) is today's driver: submit all N requests at t=0,
+    step until drained, record each request's first-token time — late
+    admissions pay the whole queue in their TTFT.  Arm 2 (``stream``)
+    serves the identical traffic through :class:`AsyncLMServer` with
+    Poisson inter-arrivals at 70% of N / batch_elapsed — the throughput
+    the engine just proved on this traffic, derated to the classic
+    sustained-utilization point so the stream arm is offered a load it
+    can actually absorb (at 100% any serving overhead compounds into an
+    unbounded backlog and TTFT measures the queue, not the server).
+    Both arms run after a full warm-up drain (compile keys retired); the
+    deltas are serving policy, not XLA.
+    """
+    import asyncio
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import AsyncLMServer, EngineCore
+
+    # n >> lanes and long-ish generations: the batch arm's *median* request
+    # must actually sit in the admission queue, else both arms just measure
+    # prefill and the comparison is noise.
+    page = 8 if tiny else 16
+    lanes = 2 if tiny else 4
+    n = 12 if tiny else 32
+    max_new = 16 if tiny else 32
+    cfg = get_config("deepseek-7b-smoke")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    need = 24 + max_new
+    num_pages = lanes * -(-need // page) + 4
+    eng = EngineCore(cfg, params, lanes=lanes, page_size=page,
+                     num_pages=num_pages, chunk_size=2 * page,
+                     max_len=num_pages * page, mode="ragged")
+
+    def drain(requests):
+        for r in requests:
+            eng.submit(r)
+        while eng.scheduler.has_work():
+            eng.step()
+        eng.finished.clear()
+
+    async def client(server, req, delay):
+        await asyncio.sleep(delay)
+        async for _ in server.generate(req):
+            pass
+
+    def stream_pass(seed: int, rate: float) -> Dict[str, Any]:
+        arrivals = np.cumsum(
+            np.random.default_rng(seed + 1).exponential(1.0 / rate, n))
+
+        async def serve():
+            async with AsyncLMServer(eng, max_waiting=n) as server:
+                await asyncio.gather(*[
+                    client(server, r, d) for r, d in
+                    zip(_serve_traffic(cfg.vocab_size, n, max_new, seed),
+                        arrivals)])
+            return server.summary()
+
+        summary = asyncio.run(serve())
+        eng.finished.clear()
+        return summary
+
+    def batch_pass(seed: int) -> Tuple[Dict[str, Any], float]:
+        reqs = _serve_traffic(cfg.vocab_size, n, max_new, seed)
+        first: Dict[int, float] = {}
+        fin: Dict[int, float] = {}
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r)
+        steps = 0
+        while eng.scheduler.has_work():
+            eng.step()
+            steps += 1
+            now = time.perf_counter()
+            for r in reqs:
+                if r.tokens and r.uid not in first:
+                    first[r.uid] = now
+                if r.done and r.uid not in fin:
+                    fin[r.uid] = now
+        elapsed = time.perf_counter() - t0
+        eng.finished.clear()
+        ttft = sorted((first[u] - t0) * 1e3 for u in first)
+        tpot = [(fin[r.uid] - first[r.uid]) / (len(r.tokens) - 1) * 1e3
+                for r in reqs if len(r.tokens) > 1]
+        return ({"req_s": n / elapsed, "steps": steps,
+                 "ttft_ms_p50": _pct(ttft, 50),
+                 "ttft_ms_p99": _pct(ttft, 99),
+                 "tpot_ms": float(np.mean(tpot)) if tpot else 0.0}, elapsed)
+
+    drain(_serve_traffic(cfg.vocab_size, n, max_new, seed=0))   # warm jits
+
+    # Both arms repeat until a pass compiles nothing new (the speculative
+    # family's convention): seed-1 prompt lengths and staggered arrivals
+    # each reach ragged bucket widths the warm drain never does, and an
+    # XLA stall in either arm would corrupt the TTFT comparison.
+    for _ in range(6):
+        c0 = eng.trace_count
+        batch, elapsed = batch_pass(seed=1)
+        if eng.trace_count == c0:
+            break
+
+    # --- stream arm: same engine, Poisson arrivals at 70% of the proven
+    # drain rate.  Offering exactly 100% is a knife edge — any per-step
+    # serving overhead makes the queue grow without bound over the trace
+    # and every client's TTFT becomes the backlog, not the server.  0.7
+    # is the classic "sustained utilization" operating point.
+    rate = 0.7 * n / elapsed
+    for _ in range(6):
+        c0 = eng.trace_count
+        stream = stream_pass(seed=1, rate=rate)
+        if eng.trace_count == c0:
+            break
+    return {"page_size": page, "lanes": lanes, "requests": n,
+            "max_new": max_new, "num_pages": num_pages,
+            "poisson_rate_req_s": rate,
+            "batch": batch, "stream": stream,
+            "ttft_p50_ratio_stream_vs_batch":
+                stream["ttft_ms_p50"] / max(batch["ttft_ms_p50"], 1e-9)}
+
+
 # ----------------------------------------------------------------- driver --
 
 def run_serving(tiny: bool = False) -> Dict[str, Any]:
@@ -701,7 +845,8 @@ def run_serving(tiny: bool = False) -> Dict[str, Any]:
             "step_breakdown": _breakdown_results(tiny),
             "prefill_ttft": _prefill_results(tiny),
             "speculative": _speculative_results(tiny),
-            "prefix_reuse": _prefix_reuse_results(tiny)}
+            "prefix_reuse": _prefix_reuse_results(tiny),
+            "serve_loop": _serve_loop_results(tiny)}
 
 
 def write_json(results: Dict[str, Any], path: str = _JSON_DEFAULT) -> None:
@@ -808,6 +953,26 @@ def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
            f"shared-page grants across admissions "
            f"({px['cached_pages']} pages resident in the radix cache, "
            f"{px['cow_copies']} CoW copies)")
+    sl = results["serve_loop"]
+    yield ("serving/serve_loop_stream_req_s", sl["stream"]["req_s"],
+           f"AsyncLMServer, Poisson arrivals at the self-calibrated "
+           f"{sl['poisson_rate_req_s']:.3g} req/s over {sl['requests']} "
+           f"requests, {sl['lanes']} lanes")
+    yield ("serving/serve_loop_stream_ttft_ms_p50",
+           sl["stream"]["ttft_ms_p50"],
+           "submit -> first streamed token, per-client arrival clock")
+    yield ("serving/serve_loop_stream_ttft_ms_p99",
+           sl["stream"]["ttft_ms_p99"],
+           "streaming TTFT tail under Poisson arrivals")
+    yield ("serving/serve_loop_stream_tpot_ms", sl["stream"]["tpot_ms"],
+           "mean inter-token time after the first, streaming clients")
+    yield ("serving/serve_loop_batch_ttft_ms_p50", sl["batch"]["ttft_ms_p50"],
+           f"batch driver (submit-all at t=0): median request pays the "
+           f"admission queue in its TTFT ({sl['batch']['steps']} steps)")
+    yield ("serving/serve_loop_ttft_p50_ratio",
+           sl["ttft_p50_ratio_stream_vs_batch"],
+           "streaming vs batch TTFT p50, same warm engine + traffic "
+           "(CI floor: <= 1)")
 
 
 def bench_paged_serving() -> Iterator[Row]:

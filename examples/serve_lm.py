@@ -1,13 +1,19 @@
-"""End-to-end serving driver (the paper's kind: inference): batched
-requests through the request-level EngineCore — continuous batching,
-chunked paged prefill and decode mixed in one step batch, mixed prompt
-lengths and sampling temperatures, with throughput accounting.
+"""Streaming serving demo: concurrent clients over the async front door.
+
+Spawns an :class:`AsyncLMServer` around the request-level EngineCore and a
+handful of streaming clients — tokens print as they arrive, per-request
+sampling params (temperature / top-k / top-p / seed / stop sequences) ride
+each request, and one client cancels mid-stream to show pages being freed
+for the survivors.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch deepseek-7b-smoke]
+      PYTHONPATH=src python examples/serve_lm.py --temperature 0.8 \
+          --top-k 50 --top-p 0.95 --seed 7 --stop 17,3
       PYTHONPATH=src python examples/serve_lm.py --arch falcon-mamba-7b-smoke \
-          --slot               # slot-contiguous engine (any cache layout)
+          --slot               # slot-contiguous engine, sync (no streaming)
 """
 import argparse
+import asyncio
 import time
 
 import jax
@@ -15,40 +21,93 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import (EngineCore, Request, ServingEngine,
+from repro.serving import (AsyncLMServer, EngineCore, Request,
+                           SamplingParams, ServingEngine,
                            UnsupportedCacheLayout)
+
+
+def parse_stop(spec):
+    """``"5,9;12"`` → ((5, 9), (12,)): ';' splits sequences, ',' tokens."""
+    if not spec:
+        return ()
+    return tuple(tuple(int(t) for t in s.split(",")) for s in spec.split(";"))
+
+
+async def stream_client(server, req, *, cancel_after=None, t0=0.0):
+    """Consume one request's token stream, printing tokens as they land."""
+    toks = []
+    label = (f"T={req.sampling.temperature}" if req.sampling.temperature > 0
+             else "greedy")
+    async for tok in server.generate(req):
+        toks.append(tok)
+        print(f"  [{time.perf_counter() - t0:6.2f}s] req {req.uid:2d} "
+              f"({label:7s}) +tok {tok}")
+        if cancel_after is not None and len(toks) >= cancel_after:
+            print(f"  [{time.perf_counter() - t0:6.2f}s] req {req.uid:2d} "
+                  f"CANCELLED by client after {len(toks)} tokens")
+            break              # leaving the async-for aborts the request
+    return toks
+
+
+async def serve(engine, reqs, cancel_uid, t0):
+    server = AsyncLMServer(engine, max_waiting=16)
+    async with server:
+        results = await asyncio.gather(*[
+            stream_client(server, r, t0=t0,
+                          cancel_after=2 if r.uid == cancel_uid else None)
+            for r in reqs])
+    return server.summary(), results
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b-smoke")
-    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--lanes", "--slots", dest="lanes", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--chunk-size", type=int, default=16)
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="shared-prefix KV reuse: requests open with a "
-                         "common system prefix, served from the radix cache "
-                         "after the first")
-    ap.add_argument("--speculative", action="store_true",
-                    help="draft-then-verify speculative decoding (n-gram "
-                         "prompt lookup, greedy lanes only; greedy output "
-                         "is token-identical, just fewer steps)")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="max draft tokens per lane per step")
+    ap.add_argument("--temperature", type=float, default=0.7,
+                    help="odd-uid requests sample at this temperature "
+                         "(even uids stay greedy for contrast)")
+    ap.add_argument("--top-k", type=int, default=None)
+    ap.add_argument("--top-p", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed base; request i uses seed+i — rerun "
+                         "with the same seed for identical streams")
+    ap.add_argument("--stop", default="",
+                    help="stop sequences as token ids (',' joins a "
+                         "sequence, ';' separates: '5,9;12')")
+    ap.add_argument("--prefix-cache", action="store_true")
+    ap.add_argument("--speculative", action="store_true")
+    ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--slot", action="store_true",
                     help="force the slot-contiguous engine (required for "
-                         "SSM-state caches, e.g. falcon-mamba-7b-smoke)")
+                         "SSM-state caches; sync, no streaming server)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        sp = SamplingParams(
+            temperature=0.0 if i % 2 == 0 else args.temperature,
+            top_k=None if i % 2 == 0 else args.top_k,
+            top_p=None if i % 2 == 0 else args.top_p,
+            seed=None if i % 2 == 0 else args.seed + i,
+            stop=parse_stop(args.stop))
+        prompt = rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(4, 24))).astype(np.int32)
+        reqs.append(Request(uid=i, prompt=prompt,
+                            max_new=int(rng.integers(6, 16)), sampling=sp))
+
     if args.slot:
         engine = ServingEngine(cfg, params, slots=args.lanes,
                                max_len=args.max_len)
-        kind = "slot-contiguous"
+        kind = "slot-contiguous (sync)"
     else:
         try:
             engine = EngineCore(
@@ -57,58 +116,41 @@ def main():
                 chunk_size=args.chunk_size, max_len=args.max_len,
                 prefix_cache=args.prefix_cache,
                 speculative=args.speculative, spec_k=args.spec_k)
-            kind = f"EngineCore paged/chunked(c={args.chunk_size})"
-            if args.prefix_cache:
-                kind += "+prefix-cache"
-            if args.speculative:
-                kind += f"+spec(k={args.spec_k})"
+            kind = "EngineCore + AsyncLMServer"
         except UnsupportedCacheLayout as e:
-            # ring/SSM layouts, or a family with no paged chunk step
-            # (e.g. encdec) — the slot engine serves both.
-            print(f"[{e.layout}] falling back to the slot engine")
+            print(f"[{e.layout}] falling back to the slot engine (sync)")
             engine = ServingEngine(cfg, params, slots=args.lanes,
                                    max_len=args.max_len)
-            kind = "slot-contiguous (fallback)"
-
-    rng = np.random.default_rng(0)
-    # With --prefix-cache, every request opens with the same "system prompt"
-    # — after the first finishes, later admissions reuse its resident pages.
-    shared = (rng.integers(0, cfg.vocab_size,
-                           3 * args.page_size).astype(np.int32)
-              if args.prefix_cache else np.zeros(0, np.int32))
-    for i in range(args.requests):
-        tail = rng.integers(0, cfg.vocab_size,
-                            int(rng.integers(4, 24))).astype(np.int32)
-        engine.submit(Request(
-            uid=i,
-            prompt=np.concatenate([shared, tail]),
-            max_new=int(rng.integers(4, 16)),
-            temperature=0.0 if i % 2 == 0 else 0.7))
+            kind = "slot-contiguous (fallback, sync)"
 
     t0 = time.perf_counter()
-    done = engine.run()
+    if isinstance(engine, ServingEngine):
+        # no abort() on the slot engine → no async server; drain in batch
+        for r in reqs:
+            engine.submit(r)
+        done = engine.run()
+        dt = time.perf_counter() - t0
+        n = sum(len(r.tokens) for r in done)
+        print(f"{cfg.name} [{kind}]: {len(done)} requests / {n} tokens "
+              f"in {dt:.2f}s")
+        for r in sorted(done, key=lambda r: r.uid):
+            print(f"  req {r.uid:2d}: {r.tokens}")
+        return
+
+    cancel_uid = args.requests - 1 if args.requests > 1 else None
+    print(f"{cfg.name} [{kind}]: {len(reqs)} streaming clients, "
+          f"req {cancel_uid} will cancel mid-stream")
+    summary, results = asyncio.run(serve(engine, reqs, cancel_uid, t0))
     dt = time.perf_counter() - t0
-    n_tok = sum(len(r.tokens) for r in done)
-    print(f"{cfg.name} [{kind}]: served {len(done)} requests / {n_tok} "
-          f"tokens on {args.lanes} lanes in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s, CPU)")
-    stats = getattr(engine, "prefix_stats", {})
-    if stats:
-        print(f"  prefix cache: {stats['hit_tokens']} of "
-              f"{stats['lookup_tokens']} known tokens served from cache "
-              f"(hit_rate {stats['hit_rate']:.3f}), "
-              f"{stats['cached_pages']} pages resident, "
-              f"{stats['cow_copies']} CoW copies")
-    spec = getattr(engine, "spec_stats", {})
-    if spec:
-        print(f"  speculative: {spec['accepted_tokens']} of "
-              f"{spec['drafted_tokens']} drafts accepted "
-              f"(+{spec['accepted_per_spec_step']:.2f} tok per drafting "
-              f"step, {spec['spec_steps']} drafting steps)")
-    for r in sorted(done, key=lambda r: r.uid)[:6]:
-        mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
-        print(f"  req {r.uid:2d} ({mode:7s}, prompt {len(r.prompt):2d}): "
-              f"{r.tokens}")
+    print(f"drained in {dt:.2f}s · sustained {summary['req_s']:.2f} req/s · "
+          f"TTFT p50 {summary['ttft_ms_p50']:.1f}ms · "
+          f"TPOT {summary['tpot_ms']:.2f}ms · "
+          f"{summary['cancelled']} cancelled")
+    print(f"pool after drain: {engine.pages_in_use} pages in use "
+          f"(cancelled pages were freed mid-serve)")
+    for r, toks in zip(reqs, results):
+        tag = " (cancelled)" if r.uid == cancel_uid else ""
+        print(f"  req {r.uid:2d}{tag}: {toks}")
 
 
 if __name__ == "__main__":

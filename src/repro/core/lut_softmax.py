@@ -46,8 +46,19 @@ def lut_softmax(x: jax.Array, axis: int = -1, *,
 
 
 def lut_log_softmax(x: jax.Array, axis: int = -1, *,
+                    where: Optional[jax.Array] = None,
                     exp_fn: ExpFn = lut_exp) -> jax.Array:
-    """log-softmax via the LUT sum (paper §VII mentions log-softmax extension)."""
+    """log-softmax via the LUT sum (paper §VII mentions log-softmax extension).
+
+    ``where`` False positions score ``NEG_INF`` — the in-step sampler's
+    Gumbel-max draw (``serving/sampling.py``) runs over these scores, so
+    top-k/top-p-masked tokens can never win the argmax."""
+    if where is not None:
+        x = jnp.where(where, x, NEG_INF)
     m = jnp.max(x, axis=axis, keepdims=True)
+    m = jnp.where(m <= NEG_INF, 0.0, m)
     e = exp_fn(x - m)
-    return x - m - jnp.log(jnp.sum(e, axis=axis, keepdims=True))
+    if where is not None:
+        e = jnp.where(where, e, 0.0)
+    s = jnp.maximum(jnp.sum(e, axis=axis, keepdims=True), 1e-30)
+    return x - m - jnp.log(s)

@@ -386,7 +386,9 @@ def lm_step_ragged(cfg: ModelConfig, params: Params, tokens: jax.Array,
                    caches: Params, token_pages: jax.Array, pos: jax.Array,
                    last_idx: jax.Array,
                    cu_seqlens: Optional[jax.Array] = None,
-                   kernel_config=None) -> Tuple[jax.Array, Params]:
+                   kernel_config=None,
+                   sampling: Optional[Dict[str, jax.Array]] = None
+                   ) -> Tuple[jax.Array, Params]:
     """The token-level (ragged) serving step: one packed ``(T,)`` stream.
 
     Where :func:`lm_prefill_chunk_paged` runs a right-aligned ``(lanes, C)``
@@ -417,6 +419,17 @@ def lm_step_ragged(cfg: ModelConfig, params: Params, tokens: jax.Array,
     trailing pseudo-segment so ``cu[-1] == T``) switch the attention layers
     to the q-block-tiled varlen dataflow; ``kernel_config`` (static) pins
     the autotuned block shapes.
+
+    ``sampling`` — per-lane arrays ``{temperature, top_k, top_p, seed,
+    counter}``, each ``(lanes,)`` — moves token selection *into this
+    graph*: instead of (logits, caches) the step returns (tokens, caches),
+    where tokens are (lanes,) int32 (or (lanes, 1+k) for speculative
+    verify, rows ≥ 1 greedy).  The draw is one vectorized pass over the
+    last-idx logits through the same LUT-exp/softmax machinery the
+    attention layers use (``serving/sampling.sample_in_step``) — no host
+    round-trip between logits and token, and the (lanes, V) tensor never
+    leaves the device.  All five arrays are traced data, so sampling
+    params can never trigger a retrace.
     """
     p_tok = jnp.asarray(pos, jnp.int32)
     x = L.embed_apply(cfg, params["embed"], tokens[None], p_tok[None])
@@ -431,4 +444,11 @@ def lm_step_ragged(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x = jnp.take(x[0], idx, axis=0)       # (lanes, D) or (lanes, 1+k, D)
     logits = L.unembed_apply(cfg, params["embed"], params.get("lm_head"), x)
     spec = ("dp", "tp") if idx.ndim == 1 else ("dp", None, "tp")
-    return maybe_shard(logits, spec), caches
+    logits = maybe_shard(logits, spec)
+    if sampling is None:
+        return logits, caches
+    # In-step sampling: logits → tokens without leaving the graph.
+    # Deferred import — repro.serving imports repro.models at module load;
+    # resolving the sampler at trace time keeps the packages acyclic.
+    from repro.serving.sampling import sample_in_step
+    return sample_in_step(logits, **sampling), caches

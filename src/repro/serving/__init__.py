@@ -4,12 +4,16 @@ from repro.serving.core import EngineCore
 from repro.serving.engine import PagedServingEngine, ServingEngine
 from repro.serving.paged import PagedKVCache
 from repro.serving.prefix_cache import PrefixHit, RadixPrefixCache
+from repro.serving.sampling import InvalidRequest, SamplingParams
 from repro.serving.scheduler import (LanePlan, RaggedBatch, Scheduler,
                                      default_token_buckets)
+from repro.serving.server import (AsyncLMServer, ServerClosed,
+                                  ServerOverloaded)
 from repro.serving.spec import NGramProposer
 
-__all__ = ["EngineCore", "LanePlan", "NGramProposer", "PagedKVCache",
-           "PagedServingEngine", "PrefixHit", "RadixPrefixCache",
-           "RaggedBatch", "Request", "RequestState", "Scheduler",
-           "ServingEngine", "StepOutput", "UnsupportedCacheLayout",
-           "default_token_buckets"]
+__all__ = ["AsyncLMServer", "EngineCore", "InvalidRequest", "LanePlan",
+           "NGramProposer", "PagedKVCache", "PagedServingEngine",
+           "PrefixHit", "RadixPrefixCache", "RaggedBatch", "Request",
+           "RequestState", "SamplingParams", "Scheduler", "ServerClosed",
+           "ServerOverloaded", "ServingEngine", "StepOutput",
+           "UnsupportedCacheLayout", "default_token_buckets"]

@@ -25,6 +25,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.sampling import InvalidRequest, SamplingParams
+
 
 class RequestState(str, enum.Enum):
     """Observable lifecycle of a request (informational; the scheduler's
@@ -34,21 +36,42 @@ class RequestState(str, enum.Enum):
     DECODE = "decode"          # resident; one new token per step
     PREEMPTED = "preempted"    # evicted mid-flight; will resume by replay
     FINISHED = "finished"
+    ABORTED = "aborted"        # cancelled by the client; pages released
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request.  ``tokens``/``done``/``state`` are filled by
-    the engine; everything else is client input."""
+    the engine; everything else is client input.
+
+    ``sampling`` is the authoritative per-request sampling record
+    (:class:`~repro.serving.sampling.SamplingParams`).  The legacy
+    ``temperature`` field survives as a constructor shorthand — when
+    ``sampling`` is omitted it seeds a default record, and afterwards the
+    two are kept in sync (scheduler policy like the speculative
+    greedy-lanes-only gate reads whichever is convenient).  Invalid
+    budgets/params raise :class:`~repro.serving.sampling.InvalidRequest`
+    at construction, never mid-serve."""
     uid: int
     prompt: np.ndarray                 # (Lp,) int32
     max_new: int = 32
     temperature: float = 0.0           # 0 = greedy
     eos_id: Optional[int] = None
+    sampling: Optional[SamplingParams] = None
     # filled by the engine:
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     state: RequestState = RequestState.WAITING
+
+    def __post_init__(self):
+        if self.sampling is None:
+            self.sampling = SamplingParams(temperature=self.temperature)
+        self.temperature = self.sampling.temperature
+        if self.sampling.max_tokens is not None:
+            self.max_new = min(self.max_new, self.sampling.max_tokens)
+        if self.max_new <= 0:
+            raise InvalidRequest("max_new", f"must be >= 1, got "
+                                 f"{self.max_new}", uid=self.uid)
 
     def known_tokens(self) -> np.ndarray:
         """prompt ⊕ generated — every token whose KV row must eventually be

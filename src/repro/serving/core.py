@@ -5,8 +5,9 @@ scheduler, and one jitted step function per packing mode:
 
 - ``mode="ragged"`` (default) — the token-level packed stream
 
-      step(params, pool, token_pages, tokens, pos, last_idx)
-          → (logits (lanes, V), pool)
+      step(params, pool, token_pages, tokens, pos, last_idx,
+           cu, temperature, top_k, top_p, seed, counter)
+          → (tokens (lanes,), pool)
 
   The scheduler flattens the step into ``T = Σ live tokens`` dense rows
   (``RaggedBatch``): lane segments abut, each token carries its own
@@ -38,9 +39,29 @@ scheduler, and one jitted step function per packing mode:
 
 Both modes trace O(1) step functions across arbitrary prompt-length
 streams — shapes are keyed by (width bucket × power-of-two table width),
-never by prompt length.  Sampling stays on the host: greedy picks break
-exact logit ties to the lowest token id (reproducible across engines and
-platforms), temperature sampling draws from a per-engine PRNG stream.
+never by prompt length.
+
+Sampling lives *inside* the jitted ragged step (``serving/sampling.py``):
+the step returns per-lane int32 tokens, drawn in one vectorized pass over
+the ``last_idx`` logits — temperature-scale → top-k/top-p mask → Gumbel-max
+categorical over the LUT log-softmax scores — with a private PRNG key per
+request, ``fold_in(PRNGKey(sampling.seed), #generated)``.  Greedy
+(temperature ≤ 0) reproduces the host-side lowest-index tie-break exactly,
+so the speculative verify rule and every cross-engine equivalence suite
+are unchanged.  The padded oracle mode still extracts (lanes, V) logits
+and draws on the host through :func:`~repro.serving.sampling.sample_row`
+— the *same* kernel on one row, so both modes share one sampling
+semantics.
+
+PRNG migration (PR 8): earlier revisions advanced one per-engine
+``self.key`` on every sampled lane, which made a request's stream depend
+on every other request the engine had ever served (and on lane placement).
+That key is gone; seeds are per-request (``SamplingParams.seed``) and the
+token stream is batch-invariant — identical whether the request runs
+alone, co-batched, or resumes after preemption.  The engine's ``seed``
+constructor arg is accepted but unused (kept so existing callers don't
+break); :func:`sample_token` survives only as the deprecated host-key
+form for code that still threads its own key.
 """
 from __future__ import annotations
 
@@ -56,6 +77,8 @@ from repro.serving.api import (Request, RequestState, StepOutput,
                                UnsupportedCacheLayout)
 from repro.serving.paged import PagedKVCache
 from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.sampling import (InvalidRequest, sample_row, stop_hit,
+                                    validate_stop_tokens)
 from repro.serving.scheduler import Scheduler
 from repro.serving.spec import NGramProposer
 
@@ -90,11 +113,14 @@ def greedy_tokens(logits: np.ndarray) -> np.ndarray:
 
 def sample_token(logits: jax.Array, temperature: float,
                  key: jax.Array) -> tuple:
-    """One host-side sample shared by every engine → (token, next key).
+    """Deprecated host-key sampling → (token, next key).
 
-    Greedy (temperature ≤ 0) is the lowest-index tie-break above; any
-    change to sampling must stay in this one place or the engines' promised
-    cross-engine token identity silently diverges.
+    This is the pre-PR-8 path: one shared key advanced per draw, which
+    made token streams depend on co-batched traffic.  Engines now draw
+    per-request via :func:`repro.serving.sampling.sample_row` (the
+    single-lane oracle of the in-step kernel); this form is kept only for
+    external callers that thread their own key.  Greedy (temperature ≤ 0)
+    is still the lowest-index tie-break.
     """
     if temperature <= 0.0:
         return greedy_token(logits), key
@@ -181,7 +207,7 @@ class EngineCore:
         self.kernel_config = (kernel_config if kernel_config is not None
                               else resolve_config(cfg.name))
         self.chunk_size = chunk_size
-        self.key = jax.random.PRNGKey(seed)
+        del seed   # per-request now (SamplingParams.seed); see module doc
         self.finished: List[Request] = []
         self.trace_count = 0            # step-fn retraces (compile counter)
         self.drafted_total = 0          # speculative telemetry, lifetime
@@ -197,10 +223,17 @@ class EngineCore:
 
         kc = self.kernel_config
 
-        def ragged_fn(params, pool, token_pages, toks, pos, last_idx, cu):
+        def ragged_fn(params, pool, token_pages, toks, pos, last_idx, cu,
+                      temperature, top_k, top_p, seed, counter):
             self.trace_count += 1       # python side effect: counts traces
+            # The five (lanes,) sampling arrays are traced data — a new
+            # temperature/seed can never be a retrace key — and the step
+            # returns tokens, not logits: selection happens in-graph.
             return m.step_ragged(params, toks, pool, token_pages, pos,
-                                 last_idx, cu_seqlens=cu, kernel_config=kc)
+                                 last_idx, cu_seqlens=cu, kernel_config=kc,
+                                 sampling=dict(temperature=temperature,
+                                               top_k=top_k, top_p=top_p,
+                                               seed=seed, counter=counter))
 
         # donated pool: every layer's row writes update in place instead of
         # copying the whole pool each step.
@@ -209,16 +242,35 @@ class EngineCore:
                         else jax.jit(ragged_fn, donate_argnums=(1,)))
 
     # ------------------------------------------------------------------ API
-    def submit(self, req: Request) -> None:
+    def validate(self, req: Request) -> None:
+        """Engine-dependent request validation (construction already checked
+        everything self-contained): budget vs ``max_len``/pool, stop-token
+        ids vs the vocab.  Raises :class:`InvalidRequest`; never admits.
+        The async front door calls this eagerly so a bad request fails in
+        the client's own context instead of mid-serve."""
         if len(req.prompt) + req.max_new > self.max_len:
-            raise ValueError(
-                f"request {req.uid}: prompt {len(req.prompt)} + max_new "
-                f"{req.max_new} exceeds max_len {self.max_len}")
+            raise InvalidRequest(
+                "max_new", f"prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} exceeds max_len {self.max_len}", uid=req.uid)
+        if len(req.prompt) == 0:
+            raise InvalidRequest("prompt", "empty prompt", uid=req.uid)
+        validate_stop_tokens(req.sampling, self.cfg.vocab_size, uid=req.uid)
+
+    def submit(self, req: Request) -> None:
+        self.validate(req)
         self.scheduler.submit(req)
 
-    def _sample(self, logits: jax.Array, temperature: float) -> int:
-        tok, self.key = sample_token(logits, temperature, self.key)
-        return tok
+    def abort(self, uid: int) -> bool:
+        """Cancel a request (client disconnect / explicit cancel).
+
+        Waiting requests leave the queue; a mid-flight request releases its
+        lane and pages *immediately* — full pages are published to the
+        prefix cache first (the computed KV stays reusable), exactly the
+        :meth:`Scheduler.finish` dataflow.  Returns False for unknown /
+        already-finished uids.  The freed lane admits new work next step;
+        an abort can never wedge a lane.
+        """
+        return self.scheduler.abort(uid)
 
     def step(self) -> StepOutput:
         """Schedule → one batched model call → sample/finish.  All phases —
@@ -276,7 +328,7 @@ class EngineCore:
         logits, self.kv.pool = self._step(
             self.params, self.kv.pool, jnp.asarray(tbl), jnp.asarray(toks),
             jnp.asarray(kv_len), jnp.asarray(q_len))
-        return self._finish(plans, logits, preempted,
+        return self._finish(plans, preempted, logits=logits,
                             live=int(sum(p.q_len for p in plans)),
                             padded=b * c)
 
@@ -314,21 +366,52 @@ class EngineCore:
         cu = np.full((self.lanes + 2,), batch.width, np.int32)
         cu[:len(batch.cu_seqlens)] = batch.cu_seqlens
 
-        logits, self.kv.pool = self._ragged(
+        picks, self.kv.pool = self._ragged(
             self.params, self.kv.pool, jnp.asarray(batch.table),
             jnp.asarray(batch.tokens), jnp.asarray(batch.pos),
-            jnp.asarray(last_idx), jnp.asarray(cu))
-        return self._finish(plans, logits, preempted,
+            jnp.asarray(last_idx), jnp.asarray(cu),
+            *self._sampling_inputs(plans))
+        return self._finish(plans, preempted, picks=np.asarray(picks),
                             live=batch.live, padded=batch.width)
 
-    def _finish(self, plans, logits, preempted, *, live: int,
-                padded: int) -> StepOutput:
-        """Shared step tail: advance cursors, sample/verify, retire finished.
+    def _sampling_inputs(self, plans):
+        """Per-lane sampling arrays for the in-step draw, all (lanes,).
 
-        Non-speculative lanes commit exactly one sampled token.  A drafting
-        lane streamed ``1 + d`` rows; the verify rule recovers the greedy
-        pick ``g[j]`` at every drafted position from the step's own logits
-        and commits ``g[0..acc]`` where ``acc`` is the longest prefix with
+        Idle tail lanes get temperature 0 (their greedy pick is computed
+        but never read).  ``counter`` is the request's generated-token
+        count — with ``seed`` it fully determines the lane's PRNG key, so
+        the draw is batch-invariant and preemption-replay-stable.
+        """
+        n = self.lanes
+        temp = np.zeros((n,), np.float32)
+        top_k = np.zeros((n,), np.int32)       # 0 = off
+        top_p = np.ones((n,), np.float32)      # 1 = off
+        seed = np.zeros((n,), np.uint32)
+        counter = np.zeros((n,), np.int32)
+        for i, p in enumerate(plans):
+            sp = p.run.req.sampling
+            temp[i] = max(sp.temperature, 0.0)
+            top_k[i] = sp.top_k or 0
+            top_p[i] = 1.0 if sp.top_p is None else sp.top_p
+            seed[i] = sp.seed or 0
+            counter[i] = len(p.run.req.tokens)
+        return (jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+                jnp.asarray(seed), jnp.asarray(counter))
+
+    def _finish(self, plans, preempted, *, live: int, padded: int,
+                picks=None, logits=None) -> StepOutput:
+        """Shared step tail: advance cursors, commit/verify, retire finished.
+
+        The ragged step hands back ``picks`` — per-lane tokens already
+        drawn in-graph, (lanes,) or (lanes, 1+k) speculative; the padded
+        oracle hands back ``logits`` and each sampling lane draws on the
+        host through :func:`~repro.serving.sampling.sample_row` (the same
+        kernel on one row).
+
+        Non-speculative lanes commit exactly one token.  A drafting lane
+        streamed ``1 + d`` rows; rows ≥ 1 of its picks are the in-graph
+        greedy verify ``g[j]`` at every drafted position, and the lane
+        commits ``g[0..acc]`` where ``acc`` is the longest prefix with
         ``g[j] == drafts[j]`` — exactly the tokens sequential greedy decode
         would have produced, one step at a time.  The cursor advances by
         ``base + (committed − 1)`` — the last committed token is *new* (its
@@ -336,6 +419,13 @@ class EngineCore:
         have their rows from this step — and :meth:`PagedKVCache.uncommit`
         returns any page holding only rejected rows, leaving pool state
         identical to never having drafted.
+
+        Stop sequences are checked after every committed token (so a stop
+        completed mid-way through a multi-token speculative commit — or
+        across step boundaries — truncates at exactly the right token):
+        the match is removed from the output and the rows cursor clamps to
+        the surviving known tokens, keeping the prefix-cache publish
+        KV-consistent.
         """
         out_tokens = {}
         finished = []
@@ -346,8 +436,7 @@ class EngineCore:
                         if p.run.req.state is RequestState.PREFILL)
         n_decode = sum(1 for p in plans
                        if p.run.req.state is RequestState.DECODE)
-        lg = np.asarray(logits)       # (lanes, V) | spec: (lanes, 1+k, V)
-        spec = lg.ndim == 3
+        lg = None if logits is None else np.asarray(logits)   # (lanes, V)
         drafted = sum(len(p.drafts) for p in plans)
         accepted = 0
         for i, p in enumerate(plans):
@@ -357,25 +446,44 @@ class EngineCore:
                 continue
             base = p.q_len - len(p.drafts)
             if p.drafts:
-                g = greedy_tokens(lg[i, :len(p.drafts) + 1])
+                g = picks[i, :len(p.drafts) + 1]
                 acc = 0
                 while acc < len(p.drafts) and int(g[acc]) == p.drafts[acc]:
                     acc += 1
                 commit = [int(t) for t in g[:acc + 1]]
+            elif picks is not None:
+                commit = [int(picks[i, 0] if picks.ndim == 2 else picks[i])]
             else:
-                row = lg[i, 0] if spec else lg[i]
-                commit = [self._sample(row, req.temperature)]
-            done = False
+                commit = [sample_row(lg[i], req.sampling, len(req.tokens))]
+            done = stopped = False
             n = 0
-            for tok in commit:        # eos / max_new can cut a commit short
+            start = len(req.tokens)
+            for tok in commit:        # eos/max_new/stop can cut this short
                 req.tokens.append(tok)
                 out_tokens[req.uid] = tok
                 n += 1
+                cut = stop_hit(req.tokens, req.sampling.stop)
+                if cut is not None:
+                    del req.tokens[cut:]     # stop match never surfaces
+                    done = stopped = True
+                    break
                 if (len(req.tokens) >= req.max_new
                         or (req.eos_id is not None and tok == req.eos_id)):
                     done = True
                     break
             run.rows += base + n - 1
+            if stopped:
+                # Truncation may have swallowed every token this step
+                # committed (and, for a stop spanning steps, earlier ones —
+                # which is why streaming clients hold back stop prefixes,
+                # see sampling.stop_holdback).  Report the last survivor of
+                # this step, or nothing; clamp the rows cursor so _publish
+                # never claims rows beyond the surviving known tokens.
+                if len(req.tokens) > start:
+                    out_tokens[req.uid] = req.tokens[-1]
+                else:
+                    out_tokens.pop(req.uid, None)
+                run.rows = min(run.rows, run.known())
             if p.drafts:
                 accepted += n - 1
                 run.pages = self.kv.uncommit(run.pages, run.rows)

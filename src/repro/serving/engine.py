@@ -30,8 +30,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import build_model
 from repro.serving.api import Request, RequestState
-from repro.serving.core import EngineCore, greedy_token, sample_token
+from repro.serving.core import EngineCore, greedy_token
 from repro.serving.paged import cache_batch_axes
+from repro.serving.sampling import sample_row, stop_hit, validate_stop_tokens
 
 __all__ = ["Request", "ServingEngine", "PagedServingEngine"]
 
@@ -48,7 +49,7 @@ class _EngineBase:
         self.params = params
         self.slots = slots
         self.max_len = max_len
-        self.key = jax.random.PRNGKey(seed)
+        del seed   # sampling keys are per-request now (SamplingParams.seed)
         self.active: List[Optional[Request]] = [None] * slots
         self.pos = np.zeros(slots, np.int64)          # per-slot next index
         self.last_tok = np.zeros(slots, np.int64)
@@ -66,14 +67,27 @@ class _EngineBase:
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> None:
+        validate_stop_tokens(req.sampling, self.cfg.vocab_size, uid=req.uid)
         self.queue.append(req)
 
     # shared with EngineCore so both surfaces stay token-identical
     greedy_token = staticmethod(greedy_token)
 
-    def _sample(self, logits: jax.Array, temperature: float) -> int:
-        tok, self.key = sample_token(logits, temperature, self.key)
-        return tok
+    def _sample(self, logits: jax.Array, req: Request) -> int:
+        # per-request draw through the in-step kernel's single-lane oracle:
+        # same keys, same pipeline → slot streams agree with EngineCore's
+        return sample_row(logits, req.sampling, len(req.tokens))
+
+    def _commit(self, req: Request, tok: int) -> bool:
+        """Append one sampled token; → True when the request is done
+        (stop sequence / eos / max_new).  A completed stop match is
+        truncated from the output before it ever surfaces."""
+        req.tokens.append(int(tok))
+        cut = stop_hit(req.tokens, req.sampling.stop)
+        if cut is not None:
+            del req.tokens[cut:]
+            return True
+        return self._should_finish(req, int(tok))
 
     def _finish(self, req: Request) -> None:
         req.done = True
@@ -158,10 +172,9 @@ class ServingEngine(_EngineBase):
             logits, c1 = self._prefill(
                 self.params, jnp.asarray(req.prompt, jnp.int32)[None], fresh)
             self._write_slot(slot, c1)
-            tok = self._sample(logits[0], req.temperature)
-            req.tokens.append(int(tok))
-            # the prefill's own sample may already satisfy eos/max_new
-            if self._should_finish(req, int(tok)):
+            tok = self._sample(logits[0], req)
+            # the prefill's own sample may already satisfy stop/eos/max_new
+            if self._commit(req, int(tok)):
                 self._finish(req)
                 continue
             req.state = RequestState.DECODE
@@ -181,11 +194,11 @@ class ServingEngine(_EngineBase):
                                            idxs)
         for s in live:
             req = self.active[s]
-            tok = self._sample(logits[s], req.temperature)
-            req.tokens.append(int(tok))
+            tok = self._sample(logits[s], req)
+            done = self._commit(req, int(tok))
             self.pos[s] += 1
             self.last_tok[s] = int(tok)
-            if self._should_finish(req, int(tok)):
+            if done:
                 self._finish(req)
                 self.active[s] = None           # recycle immediately
         return len(live)

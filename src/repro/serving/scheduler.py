@@ -69,6 +69,7 @@ import numpy as np
 from repro.serving.api import Request, RequestState
 from repro.serving.paged import PagedKVCache
 from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.sampling import InvalidRequest
 
 
 def default_token_buckets(max_tokens: int) -> Tuple[int, ...]:
@@ -214,6 +215,10 @@ class Scheduler:
             f"step_tokens={self.step_tokens}")
         self.waiting: List[RunningRequest] = []     # ordered by ticket
         self.running: List[RunningRequest] = []     # ordered by ticket
+        # Page-table width high-water mark (see pack()): the table's P axis
+        # never shrinks, so the jitted step's trace keys stay O(#buckets)
+        # instead of O(#buckets × #table widths).
+        self._table_pages = 1
         self._ticket = 0
         self.preempted_count = 0                    # evictions, lifetime
         self._evicted_now: List[int] = []           # within one schedule()
@@ -224,13 +229,14 @@ class Scheduler:
         if len(req.prompt) == 0:
             # known() == 0 would plan q_len = 0 forever: a lane-wedging
             # livelock, not a servable request.
-            raise ValueError(f"request {req.uid}: empty prompt")
+            raise InvalidRequest("prompt", "empty prompt", uid=req.uid)
         worst = len(req.prompt) + req.max_new
         if self.kv.pages_needed(worst) > self.kv.num_pages:
-            raise ValueError(
-                f"request {req.uid} needs {self.kv.pages_needed(worst)} "
-                f"pages worst-case (> pool of {self.kv.num_pages}) — raise "
-                f"num_pages")
+            raise InvalidRequest(
+                "max_new",
+                f"needs {self.kv.pages_needed(worst)} pages worst-case "
+                f"(> pool of {self.kv.num_pages}) — raise num_pages",
+                uid=req.uid)
         req.state = RequestState.WAITING
         self.waiting.append(RunningRequest(req, self._ticket))
         self._ticket += 1
@@ -246,6 +252,34 @@ class Scheduler:
         run.req.state = RequestState.FINISHED
         if self.cache is not None:
             self.cache.enforce_budget()
+
+    def abort(self, uid: int) -> bool:
+        """Cancel a request by uid → True if it was waiting or running.
+
+        A running request releases exactly like :meth:`finish` — full pages
+        published to the prefix cache (refcount-aware release; pages another
+        request or the cache still holds are not freed), the lane opens for
+        next step's admission — but lands in ``ABORTED``, never in the
+        engine's finished list.  A waiting request simply leaves the queue.
+        """
+        for run in self.waiting:
+            if run.req.uid == uid:
+                self.waiting.remove(run)
+                run.req.done = True
+                run.req.state = RequestState.ABORTED
+                return True
+        for run in self.running:
+            if run.req.uid == uid:
+                self.running.remove(run)
+                self._publish(run)
+                self.kv.release(run.pages)
+                run.pages = []
+                run.req.done = True
+                run.req.state = RequestState.ABORTED
+                if self.cache is not None:
+                    self.cache.enforce_budget()
+                return True
+        return False
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
@@ -558,6 +592,14 @@ class Scheduler:
         width = self._bucket_up(max(live, 1))
         pw = max((len(p.run.pages) for p in plans), default=1)
         pw = 1 << max(pw - 1, 0).bit_length()         # table-width bucket
+        # High-water mark: without it the table's P axis shrinks whenever
+        # the resident mix turns short (fresh arrivals mid-serve), and the
+        # jitted step retraces at (stream width × table width) — a compile
+        # stall in the middle of live traffic for a shape the engine has
+        # already paid for.  Never shrinking costs only masked page blocks
+        # the longest-resident request was already scanning.
+        self._table_pages = max(self._table_pages, pw)
+        pw = self._table_pages
         scratch = self.kv.scratch
         tokens = np.zeros((width,), np.int32)
         pos = np.zeros((width,), np.int32)

@@ -119,11 +119,11 @@ def test_ragged_step_token_identical_to_padded_step(kv_quant):
 def test_distinct_prompt_lengths_compile_O1_step_functions(mode):
     """The recompile fallout of the per-prompt-length b=1 prefill is gone in
     both packings: step shapes are keyed by (width bucket × power-of-two
-    table width) — the padded step's widths are {1, C}, the ragged step's
-    the scheduler's token-bucket set — never by prompt length.  A first
-    stream warms every reachable combo; a second stream of seven *new*
-    distinct lengths then traces nothing at all (the PR-2 engines compiled
-    one prefill per length)."""
+    table width, held at its high-water mark) — the padded step's widths
+    are {1, C}, the ragged step's the scheduler's token-bucket set — never
+    by prompt length.  A first stream warms every reachable combo; a
+    second stream of *new* distinct lengths then traces nothing at all
+    (the PR-2 engines compiled one prefill per length)."""
     cfg, params = build()
     eng = EngineCore(cfg, params, lanes=1, page_size=8, num_pages=64,
                      chunk_size=8, mode=mode)
@@ -147,6 +147,38 @@ def test_distinct_prompt_lengths_compile_O1_step_functions(mode):
     assert eng.trace_count == traced, (
         f"new prompt lengths retraced the step: {traced} → "
         f"{eng.trace_count}")
+
+
+def test_page_table_width_never_shrinks_across_steps():
+    """pack() holds the page-table P axis at its high-water mark: after a
+    long resident has grown the table, a later short-only step packs at
+    the same width — same trace key — instead of shrinking back.  Without
+    the mark, every time the resident mix turned short (fresh arrivals
+    mid-serve) the step recompiled at (stream width × smaller table
+    width): a multi-second XLA stall in the middle of live traffic for a
+    shape the engine had already paid for."""
+    cfg, params = build()
+    eng = EngineCore(cfg, params, lanes=2, page_size=8, num_pages=32,
+                     chunk_size=8, mode="ragged")
+    widths = []
+    inner = eng._ragged
+
+    def spy(p, pool, table, *rest):
+        widths.append(int(table.shape[1]))
+        return inner(p, pool, table, *rest)
+
+    eng._ragged = spy
+    eng.submit(Request(uid=0, prompt=prompts_for(cfg, 3, (20,))[0],
+                       max_new=8))             # 28 rows → 4 pages resident
+    eng.run()
+    eng.finished.clear()
+    hwm = max(widths)
+    assert hwm >= 4, widths
+    widths.clear()
+    eng.submit(Request(uid=1, prompt=prompts_for(cfg, 4, (4,))[0],
+                       max_new=4))             # 1-page request, solo
+    eng.run()
+    assert widths and set(widths) == {hwm}, (widths, hwm)
 
 
 # ------------------------------------------------------------ preemption --
@@ -338,6 +370,13 @@ def test_empty_prompt_rejected_at_submit():
 
 # ----------------------------------------------- ragged graph guarantees --
 
+def _sampling_args(lanes):
+    """All-greedy in-step sampling arrays for tracing the ragged step."""
+    return (jnp.zeros((lanes,), jnp.float32), jnp.zeros((lanes,), jnp.int32),
+            jnp.ones((lanes,), jnp.float32), jnp.zeros((lanes,), jnp.uint32),
+            jnp.zeros((lanes,), jnp.int32))
+
+
 def test_ragged_graph_has_no_padded_intermediate():
     """The ragged step graph must never materialise a (lanes, C)-padded
     block: every intermediate of the traced step is checked for an
@@ -357,7 +396,7 @@ def test_ragged_graph_has_no_padded_intermediate():
         eng.params, eng.kv.pool,
         jnp.full((t, pw), eng.kv.scratch, jnp.int32),
         jnp.zeros((t,), jnp.int32), jnp.zeros((t,), jnp.int32),
-        jnp.zeros((lanes,), jnp.int32), cu)
+        jnp.zeros((lanes,), jnp.int32), cu, *_sampling_args(lanes))
 
     def padded_pairs(shapes):
         return [s for s in shapes

@@ -1,0 +1,290 @@
+"""Async front door: streaming, backpressure, cancellation, drain.
+
+The server contracts (PR 8):
+
+- stream identity — tokens streamed per-client by :class:`AsyncLMServer`
+  are exactly the tokens the batch driver commits for the same requests;
+- cancellation — a client breaking out of its stream aborts the request:
+  pages are freed before the next step, full pages publish to the prefix
+  cache, and the freed lane is reused (never wedged);
+- backpressure — ``admission="reject"`` sheds load at the door with
+  ``ServerOverloaded``; ``admission="wait"`` suspends clients and
+  eventually serves everyone;
+- validation — a bad request raises in the submitting client's own
+  context and perturbs nobody else;
+- shutdown — draining shutdown finishes resident work, ``drain=False``
+  aborts it; new arrivals after close get ``ServerClosed``.
+
+No pytest-asyncio here: each test owns its loop via ``asyncio.run``.
+"""
+import asyncio
+
+import pytest
+
+from repro.serving import (AsyncLMServer, EngineCore, InvalidRequest,
+                           Request, RequestState, SamplingParams,
+                           ServerClosed, ServerOverloaded, ServingEngine)
+from tests.test_engine_core import build, by_uid, prompts_for
+
+
+def engine(cfg, params, **kw):
+    kw.setdefault("lanes", 4)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("chunk_size", 8)
+    return EngineCore(cfg, params, **kw)
+
+
+def reqs_for(cfg, n, *, seed=0, max_new=6, **sp):
+    prompts = prompts_for(cfg, seed, tuple(4 + 3 * i for i in range(n)))
+    sampling = SamplingParams(**sp) if sp else None
+    return [Request(uid=i, prompt=p, max_new=max_new, sampling=sampling)
+            for i, p in enumerate(prompts)]
+
+
+async def consume(server, req, *, cancel_after=None):
+    toks = []
+    async for tok in server.generate(req):
+        toks.append(tok)
+        if cancel_after is not None and len(toks) >= cancel_after:
+            break
+    return toks
+
+
+# ------------------------------------------------------- stream identity --
+
+def test_streams_match_batch_driver():
+    """Concurrent async clients see exactly the batch driver's tokens."""
+    cfg, params = build()
+    want = by_uid(r for r in _drain_batch(cfg, params))
+
+    eng = engine(cfg, params)
+
+    async def main():
+        async with AsyncLMServer(eng) as server:
+            outs = await asyncio.gather(
+                *[consume(server, r) for r in reqs_for(cfg, 5)])
+        return outs, server.summary()
+
+    outs, summary = asyncio.run(main())
+    assert {i: t for i, t in enumerate(outs)} == want
+    assert summary["requests"] == 5 and summary["cancelled"] == 0
+    assert summary["tokens"] == sum(len(t) for t in want.values())
+    assert summary["ttft_ms_p50"] <= summary["ttft_ms_p99"]
+    assert eng.pages_in_use == 0
+
+
+def _drain_batch(cfg, params):
+    eng = engine(cfg, params)
+    for r in reqs_for(cfg, 5):
+        eng.submit(r)
+    while eng.scheduler.has_work():
+        eng.step()
+    return eng.finished
+
+
+def test_sampled_stream_through_server_is_seed_reproducible():
+    cfg, params = build()
+
+    def serve_once():
+        eng = engine(cfg, params)
+
+        async def main():
+            async with AsyncLMServer(eng) as server:
+                return await asyncio.gather(*[
+                    consume(server, r)
+                    for r in reqs_for(cfg, 3, temperature=1.0, seed=7)])
+        return asyncio.run(main())
+
+    assert serve_once() == serve_once()
+
+
+# ---------------------------------------------------------- cancellation --
+
+def test_cancel_frees_pages_and_survivors_finish():
+    cfg, params = build()
+    want = by_uid(r for r in _drain_batch(cfg, params))
+    eng = engine(cfg, params)
+    rs = reqs_for(cfg, 5, max_new=8)
+
+    async def main():
+        async with AsyncLMServer(eng) as server:
+            outs = await asyncio.gather(*[
+                consume(server, r, cancel_after=2 if r.uid == 3 else None)
+                for r in rs])
+        return outs, server.summary()
+
+    outs, summary = asyncio.run(main())
+    assert summary["cancelled"] == 1
+    assert rs[3].state == RequestState.ABORTED
+    assert len(outs[3]) == 2
+    # survivors are token-identical to the batch driver — the abort
+    # perturbed nothing (and its freed lane kept serving them)
+    for uid in (0, 1, 2, 4):
+        assert outs[uid][:6] == want[uid]
+    assert eng.pages_in_use == 0           # cancelled pages were returned
+
+
+def test_cancel_before_admission_never_reaches_engine():
+    cfg, params = build()
+    eng = engine(cfg, params, lanes=1)
+
+    async def main():
+        async with AsyncLMServer(eng) as server:
+            task = asyncio.ensure_future(
+                consume(server, reqs_for(cfg, 1, max_new=4)[0]))
+            task.cancel()
+            try:
+                await task
+            except asyncio.CancelledError:
+                pass
+        return server.summary()
+
+    summary = asyncio.run(main())
+    assert summary["requests"] == 0
+    assert not eng.scheduler.has_work()
+
+
+# ----------------------------------------------------------- backpressure --
+
+def test_admission_reject_sheds_burst():
+    cfg, params = build()
+    eng = engine(cfg, params, lanes=1)
+
+    async def main():
+        served, shed = [], 0
+        async with AsyncLMServer(eng, max_waiting=1,
+                                 admission="reject") as server:
+            async def client(r):
+                nonlocal shed
+                try:
+                    served.append(await consume(server, r))
+                except ServerOverloaded:
+                    shed += 1
+            await asyncio.gather(*[client(r) for r in reqs_for(cfg, 8)])
+        return served, shed
+
+    served, shed = asyncio.run(main())
+    assert shed > 0                       # the burst was shed at the door
+    assert len(served) + shed == 8
+    assert all(len(t) == 6 for t in served)
+
+
+def test_admission_wait_serves_everyone():
+    cfg, params = build()
+    eng = engine(cfg, params, lanes=1)
+
+    async def main():
+        async with AsyncLMServer(eng, max_waiting=1) as server:
+            return await asyncio.gather(
+                *[consume(server, r) for r in reqs_for(cfg, 6)])
+
+    outs = asyncio.run(main())
+    assert len(outs) == 6 and all(len(t) == 6 for t in outs)
+
+
+# ------------------------------------------------------------- validation --
+
+def test_invalid_request_raises_in_client_context():
+    cfg, params = build()
+    eng = engine(cfg, params)
+    good = reqs_for(cfg, 1)[0]
+    bad = Request(uid=9, prompt=good.prompt, max_new=4,
+                  sampling=SamplingParams(stop=((cfg.vocab_size + 5,),)))
+
+    async def main():
+        async with AsyncLMServer(eng) as server:
+            with pytest.raises(InvalidRequest, match="vocab"):
+                await consume(server, bad)
+            return await consume(server, good)
+
+    assert len(asyncio.run(main())) == 6  # the good client was unperturbed
+
+
+# --------------------------------------------------------------- shutdown --
+
+def test_shutdown_drains_then_refuses_new_work():
+    cfg, params = build()
+    eng = engine(cfg, params)
+    rs = reqs_for(cfg, 2)
+
+    async def main():
+        server = await AsyncLMServer(eng).start()
+        tasks = [asyncio.ensure_future(consume(server, r)) for r in rs]
+        await asyncio.sleep(0)             # let clients enqueue
+        await server.shutdown(drain=True)
+        outs = [await t for t in tasks]
+        with pytest.raises(ServerClosed):
+            await consume(server, reqs_for(cfg, 1, seed=3)[0])
+        return outs
+
+    outs = asyncio.run(main())
+    assert all(len(t) == 6 for t in outs)  # resident work finished
+
+
+def test_shutdown_no_drain_aborts_in_flight():
+    cfg, params = build()
+    eng = engine(cfg, params)
+    rs = reqs_for(cfg, 3, max_new=64)
+
+    async def main():
+        server = await AsyncLMServer(eng).start()
+        tasks = [asyncio.ensure_future(consume(server, r)) for r in rs]
+        while server.steps < 2:            # some tokens in flight
+            await asyncio.sleep(0.01)
+        await server.shutdown(drain=False)
+        return [await t for t in tasks], server
+
+    outs, server = asyncio.run(main())
+    assert all(len(t) < 64 for t in outs)
+    assert server.cancelled == 3
+    assert eng.pages_in_use == 0
+
+
+# ------------------------------------------------------ engine-level abort --
+
+def test_engine_abort_running_frees_pages_and_publishes_prefix():
+    cfg, params = build()
+    eng = engine(cfg, params, prefix_cache=True)
+    rs = reqs_for(cfg, 2, max_new=16)
+    for r in rs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    before = eng.pages_in_use
+    assert eng.abort(rs[1].uid)
+    assert eng.pages_in_use < before       # pages freed within the call
+    assert rs[1].state == RequestState.ABORTED
+    # full pages of the aborted request's known prefix were published
+    assert eng.prefix_cache.stats()["inserted_pages"] >= 1
+    # the freed lane is reusable: new work admits and completes
+    nxt = Request(uid=77, prompt=rs[0].prompt, max_new=4)
+    eng.submit(nxt)
+    while eng.scheduler.has_work():
+        eng.step()
+    assert len(nxt.tokens) == 4 and nxt.done
+    assert not eng.abort(rs[1].uid)        # double-abort is a no-op
+
+
+def test_engine_abort_waiting_request():
+    cfg, params = build()
+    eng = engine(cfg, params, lanes=1)
+    rs = reqs_for(cfg, 3, max_new=4)
+    for r in rs:
+        eng.submit(r)
+    eng.step()                             # uid 0 admitted; 1, 2 waiting
+    assert eng.abort(rs[2].uid)
+    assert rs[2].state == RequestState.ABORTED
+    while eng.scheduler.has_work():
+        eng.step()
+    assert rs[0].done and rs[1].done and not rs[2].tokens
+    assert eng.pages_in_use == 0
+
+
+def test_server_requires_abortable_engine():
+    cfg, params = build()
+    slot = ServingEngine(cfg, params, slots=1, max_len=48)
+    with pytest.raises(TypeError, match="abort"):
+        AsyncLMServer(slot)
+    with pytest.raises(ValueError, match="admission"):
+        AsyncLMServer(engine(cfg, params), admission="drop")

@@ -68,13 +68,22 @@ def test_mixed_lengths_and_recycling(rng):
         assert len(r.tokens) == n
 
 
-def test_temperature_sampling_varies(rng):
-    cfg, params, eng = mk_engine(slots=2)
+def test_temperature_sampling_per_request_seeds(rng):
+    """Sampling keys are per-request (SamplingParams.seed), not a shared
+    engine stream: distinct seeds on the same prompt diverge, and the same
+    seed reproduces the identical stream — co-batched or re-served."""
+    from repro.serving import SamplingParams
+    cfg, params, eng = mk_engine(slots=4)
     prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
-    eng.submit(Request(uid=0, prompt=prompt, max_new=8, temperature=1.5))
-    eng.submit(Request(uid=1, prompt=prompt, max_new=8, temperature=1.5))
-    a, b = eng.run()
-    assert a.tokens != b.tokens       # overwhelmingly likely
+    eng.submit(Request(uid=0, prompt=prompt, max_new=8,
+                       sampling=SamplingParams(temperature=1.5, seed=1)))
+    eng.submit(Request(uid=1, prompt=prompt, max_new=8,
+                       sampling=SamplingParams(temperature=1.5, seed=2)))
+    eng.submit(Request(uid=2, prompt=prompt, max_new=8,
+                       sampling=SamplingParams(temperature=1.5, seed=1)))
+    done = {r.uid: r.tokens for r in eng.run()}
+    assert done[0] != done[1]         # distinct seeds: overwhelmingly likely
+    assert done[0] == done[2]         # same seed: exactly reproducible
 
 
 def test_greedy_tie_break_lowest_index():

@@ -528,6 +528,7 @@ def test_verify_graph_is_one_varlen_attend():
     loop or a re-attend (dot_general / scan / while counts), contain no
     (lanes, C)-padded intermediate, and no rank ≥ 4 (lanes, 1+k)-leading
     gathered-KV tensor."""
+    from tests.test_engine_core import _sampling_args
     from tests.test_paged_serving import _jaxpr_shapes
 
     cfg, params = build()
@@ -542,9 +543,10 @@ def test_verify_graph_is_one_varlen_attend():
     # 1 + k rows each, then the trailing pseudo-segment ending at T
     cu = jnp.asarray([0, 5, 10, 15, t, t], jnp.int32)
     spec_jaxpr = jax.make_jaxpr(eng._ragged)(
-        *args, jnp.zeros((lanes, k + 1), jnp.int32), cu)
+        *args, jnp.zeros((lanes, k + 1), jnp.int32), cu,
+        *_sampling_args(lanes))
     plain_jaxpr = jax.make_jaxpr(eng._ragged)(
-        *args, jnp.zeros((lanes,), jnp.int32), cu)
+        *args, jnp.zeros((lanes,), jnp.int32), cu, *_sampling_args(lanes))
 
     spec_c, plain_c = (_prim_counts(j.jaxpr)
                        for j in (spec_jaxpr, plain_jaxpr))
