@@ -72,6 +72,17 @@ across PRs:
    streaming TTFT p50 ≤ the batch driver's (spreading arrivals over the
    window the engine needs anyway must not cost first-token latency).
 
+7. **Sharded serving** — the tensor-parallel engine (PR 9): identical
+   mixed traffic served at mesh 1 vs mesh 2, tok/s plus the analytic
+   per-token / per-step all-gather bytes at each width.  The backend pins
+   its device count at first jax init (1 on CPU), so this arm runs in a
+   subprocess with two forced host devices, exactly like
+   ``tests/_multidevice.py``.  The tok/s ratio is recorded with **no CPU
+   floor**: two placeholder devices share the same cores, so the CPU
+   number measures shard_map + collective overhead, not the speedup a
+   real 2-chip mesh sees (the collective-bytes column is the
+   device-independent signal).
+
 CPU numbers are relative A/B signals, not TPU claims (docs/benchmarks.md).
 """
 from __future__ import annotations
@@ -838,6 +849,83 @@ def _serve_loop_results(tiny: bool) -> Dict[str, Any]:
 
 # ----------------------------------------------------------------- driver --
 
+# --------------------------------------------------------- sharded engine --
+
+_SHARDED_SNIPPET = """
+import json, time
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import EngineCore, Request
+
+tiny = {tiny}
+page, lanes = 8, 4
+num_pages = 32 if tiny else 64
+cfg = get_config("deepseek-7b-smoke")
+params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+def traffic(seed=7):
+    rng = np.random.default_rng(seed)
+    n = 6 if tiny else 12
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 40)))
+                    .astype(np.int32),
+                    max_new=int(rng.integers(4, 12)))
+            for i in range(n)]
+
+def arm(mesh):
+    eng = EngineCore(cfg, params, lanes=lanes, page_size=page,
+                     num_pages=num_pages, chunk_size=2 * page, mesh=mesh)
+    for r in traffic():                 # warm pass: compile every bucket
+        eng.submit(r)
+    eng.run()
+    reqs = traffic(seed=8)
+    for r in reqs:
+        eng.submit(r)
+    steps = rows = 0
+    t0 = time.perf_counter()
+    while eng.scheduler.has_work():
+        out = eng.step()
+        steps += 1
+        rows += out.live_rows
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in reqs)
+    per_tok = eng.collective_bytes_per_token
+    return {{"mesh": eng.mesh_size, "tok_s": toks / dt, "steps": steps,
+             "tokens": toks, "live_rows": rows,
+             "collective_bytes_per_token": per_tok,
+             "collective_bytes_per_step": per_tok * rows // max(steps, 1),
+             "traces": eng.trace_count}}
+
+out = {{"mesh1": arm(None), "mesh2": arm(2)}}
+out["tok_s_ratio_mesh2_vs_mesh1"] = (out["mesh2"]["tok_s"]
+                                     / out["mesh1"]["tok_s"])
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _sharded_results(tiny: bool) -> Dict[str, Any]:
+    """Mesh 1 vs mesh 2 on identical traffic, in a 2-device subprocess."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2").strip()
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SNIPPET.format(tiny=tiny)],
+        capture_output=True, text=True, env=env, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded arm failed:\n{proc.stderr[-4000:]}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
 def run_serving(tiny: bool = False) -> Dict[str, Any]:
     return {"meta": {"platform": jax.default_backend(), "tiny": tiny,
                      "config": "deepseek-7b-smoke"},
@@ -846,7 +934,8 @@ def run_serving(tiny: bool = False) -> Dict[str, Any]:
             "prefill_ttft": _prefill_results(tiny),
             "speculative": _speculative_results(tiny),
             "prefix_reuse": _prefix_reuse_results(tiny),
-            "serve_loop": _serve_loop_results(tiny)}
+            "serve_loop": _serve_loop_results(tiny),
+            "sharded": _sharded_results(tiny)}
 
 
 def write_json(results: Dict[str, Any], path: str = _JSON_DEFAULT) -> None:
@@ -973,6 +1062,20 @@ def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
            sl["ttft_p50_ratio_stream_vs_batch"],
            "streaming vs batch TTFT p50, same warm engine + traffic "
            "(CI floor: <= 1)")
+    sh = results["sharded"]
+    yield ("serving/sharded_tok_s_mesh1", sh["mesh1"]["tok_s"],
+           f"single-device ragged engine in the 2-device subprocess "
+           f"({sh['mesh1']['tokens']} toks over {sh['mesh1']['steps']} steps)")
+    yield ("serving/sharded_tok_s_mesh2", sh["mesh2"]["tok_s"],
+           "same traffic, KV-head-sharded pool + shard_map step at mesh 2")
+    yield ("serving/sharded_tok_s_ratio", sh["tok_s_ratio_mesh2_vs_mesh1"],
+           "mesh 2 vs mesh 1 tok/s — recorded, NO CPU floor (placeholder "
+           "devices share the same cores; overhead signal only)")
+    yield ("serving/sharded_collective_bytes_per_token",
+           float(sh["mesh2"]["collective_bytes_per_token"]),
+           f"analytic all-gather bytes received per device per token row "
+           f"at mesh 2 (per step: {sh['mesh2']['collective_bytes_per_step']}"
+           f" B; mesh 1: {sh['mesh1']['collective_bytes_per_token']} B)")
 
 
 def bench_paged_serving() -> Iterator[Row]:

@@ -351,17 +351,21 @@ def _paged(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
 @register_backend(
     "paged_varlen",
     supports=lambda call: call.has_page_table and call.is_ragged
-    and not call.inside_shard_map and not call.has_kv_pos,
+    and not call.has_kv_pos,
     doc="Ragged (varlen) paged attention: q is one packed (1, Hq, T, D) "
         "token stream with per-token page-table rows (T, P) and per-token "
         "causal bounds q_pos (T,) — the token-level serving step, no "
         "(lanes, C) padding.  cu_seqlens lane boundaries switch on the "
         "q-block-tiled dataflow (each KV page read once per block, not "
         "once per token); block shapes come from the autotuner's "
-        "KernelConfig (kernels/paged_attention/varlen.py).")
+        "KernelConfig (kernels/paged_attention/varlen.py).  Inside "
+        "shard_map (axis_name set) q/k/v carry this device's head band "
+        "against its local pool shard; the full head axis is rebuilt with "
+        "one tiled all-gather — HASTILY's reduce-and-gather with the "
+        "online-softmax reduce kept per-head-local (docs/architecture.md).")
 def _paged_varlen(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
                   q_offset, kv_len, kv_pos, page_table, q_pos,
-                  cu_seqlens=None, kernel_config=None):
+                  cu_seqlens=None, kernel_config=None, axis_name=None):
     assert kv_pos is None, "ragged backend has no ring-buffer support"
     assert causal, "ragged paged streams are causal by construction"
     assert q.shape[0] == 1, \
@@ -379,12 +383,19 @@ def _paged_varlen(q, k, v, *, scale, causal, window, cap, block_k, exp_mode,
                                  block_q=cfg.block_q,
                                  block_pages=cfg.block_pages,
                                  dequant=cfg.dequant)
-    return jnp.moveaxis(out, 0, 1)[None]                # (1, Hq, T, D)
+    out = jnp.moveaxis(out, 0, 1)[None]                 # (1, Hq, T, D)
+    if axis_name is not None:
+        # Head bands concatenate in mesh order — pure data movement, no
+        # cross-device float arithmetic, so per-head outputs are bitwise
+        # what a single device would compute.
+        out = jax.lax.all_gather(out, axis_name, axis=1, tiled=True)
+    return out
 
 
 @register_backend(
     "ring",
-    supports=lambda call: call.inside_shard_map,
+    supports=lambda call: call.inside_shard_map
+    and not call.has_page_table,
     doc="Inter-chip ring attention: KV shards rotate around a mesh axis via "
         "ppermute while resident Q streams them (HASTILY §IV lifted to ICI). "
         "Only callable inside shard_map — pass axis_name.")

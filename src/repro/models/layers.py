@@ -168,6 +168,7 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                token_pages: Optional[jax.Array] = None,
                cu_seqlens: Optional[jax.Array] = None,
                kernel_config=None,
+               tp_axis: Optional[str] = None,
                xkv: Optional[jax.Array] = None,
                ) -> Tuple[jax.Array, Optional[Params]]:
     """One attention layer.
@@ -201,6 +202,14 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
     q-block-tiled varlen dataflow (each KV page read once per q-block);
     ``kernel_config``: the autotuned ``KernelConfig`` block shapes (static;
     ``None`` consults the autotuner's active config).
+    ``tp_axis``: mesh axis name when this apply runs *inside shard_map*
+    over KV-head-sharded page pools (the tensor-parallel ragged step).
+    The residual stream, params and projections stay replicated; this
+    layer slices its own contiguous head band (rope/qk_norm are per-head,
+    so slicing after them is bit-identical to projecting the band alone),
+    writes the band's KV rows into the local pool shard, attends over
+    local heads only, and rebuilds the full head axis with one tiled
+    all-gather before ``wo``.  Ragged (``token_pages``) path only.
     ``xkv``: cross-attention source (encoder output); disables cache/rope-k.
     """
     b, l, _ = x.shape
@@ -244,6 +253,23 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
         #   only its own lane's pages.  Dead bucket-padding rows carry an
         #   all-scratch table row.
         assert xkv is None, "paged attention has no cross-attention path"
+        # Tensor-parallel ragged step: the local pool shard's head count
+        # tells us the shard factor (static — compat.axis_size is traced on
+        # 0.4.x); the device index only feeds a dynamic_slice start.
+        shards = 1
+        if tp_axis is not None:
+            assert token_pages is not None, \
+                "tp_axis is only supported on the ragged (token_pages) path"
+            hkv_local = cache["k"].shape[1]
+            shards = cfg.num_kv_heads // hkv_local
+        if shards > 1:
+            hq_local = cfg.num_heads // shards
+            band = jax.lax.axis_index(tp_axis)
+            q = jax.lax.dynamic_slice_in_dim(q, band * hq_local, hq_local, 1)
+            k = jax.lax.dynamic_slice_in_dim(k, band * hkv_local,
+                                             hkv_local, 1)
+            v = jax.lax.dynamic_slice_in_dim(v, band * hkv_local,
+                                             hkv_local, 1)
         ps = cache["k"].shape[2]
         scratch = cache["k"].shape[0] - 1               # pool's sink page
         if token_pages is not None:
@@ -297,8 +323,11 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                     jnp.moveaxis(q[0], 1, 0), new_cache["k"], new_cache["v"],
                     token_pages, p_tok, cu_seqlens=cu_seqlens,
                     block_q=kc.block_q, block_pages=kc.block_pages,
-                    dequant=kc.dequant, **attn_kw)      # (T, Hq, Dh)
-                out = jnp.moveaxis(out, 0, 1)[None]     # (1, Hq, T, Dh)
+                    dequant=kc.dequant, **attn_kw)      # (T, Hq', Dh)
+                out = jnp.moveaxis(out, 0, 1)[None]     # (1, Hq', T, Dh)
+                if shards > 1:
+                    out = jax.lax.all_gather(out, tp_axis, axis=1,
+                                             tiled=True)
             else:
                 out = paged_attention(q, new_cache["k"], new_cache["v"],
                                       page_table, kv_len, **attn_kw)
@@ -308,6 +337,8 @@ def attn_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
                          cu_seqlens=cu_seqlens, kernel_config=kernel_config)
                     if token_pages is not None
                     else dict(kv_len=kv_len, page_table=page_table))
+            if shards > 1:
+                conv["axis_name"] = tp_axis     # varlen backend all-gathers
             out = attention(q, new_cache["k"], new_cache["v"],
                             backend=backend_for_config(cfg.attn_backend,
                                                        cfg.attn_impl),

@@ -76,7 +76,8 @@ def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
                  q_len: Optional[jax.Array] = None,
                  token_pages: Optional[jax.Array] = None,
                  cu_seqlens: Optional[jax.Array] = None,
-                 kernel_config=None
+                 kernel_config=None,
+                 tp_axis: Optional[str] = None
                  ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     aux = jnp.zeros((), jnp.float32)
     if kind == "mamba":
@@ -90,7 +91,8 @@ def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
                                 page_table=page_table, q_len=q_len,
                                 token_pages=token_pages,
                                 cu_seqlens=cu_seqlens,
-                                kernel_config=kernel_config)
+                                kernel_config=kernel_config,
+                                tp_axis=tp_axis)
     if cfg.post_block_norm:
         a = L.norm_apply(cfg, p["ln1_post"], a)
     x = x + a
@@ -166,7 +168,8 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 q_len: Optional[jax.Array] = None,
                 token_pages: Optional[jax.Array] = None,
                 cu_seqlens: Optional[jax.Array] = None,
-                kernel_config=None
+                kernel_config=None,
+                tp_axis: Optional[str] = None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     kinds, nper, tail = period_layout(cfg)
     shared = params.get("shared_attn")
@@ -191,7 +194,7 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 cache_index=cache_index, causal=causal,
                 page_table=page_table, q_len=q_len,
                 token_pages=token_pages, cu_seqlens=cu_seqlens,
-                kernel_config=kernel_config)
+                kernel_config=kernel_config, tp_axis=tp_axis)
             if pc is not None:
                 new_c[str(i)] = lc
             aux = aux + a
@@ -227,7 +230,7 @@ def trunk_apply(cfg: ModelConfig, params: Params, x: jax.Array, *,
                 cache_index=cache_index, causal=causal,
                 page_table=page_table, q_len=q_len,
                 token_pages=token_pages, cu_seqlens=cu_seqlens,
-                kernel_config=kernel_config)
+                kernel_config=kernel_config, tp_axis=tp_axis)
             aux_total = aux_total + a
             new_caches["tail"].append(lc)
     return x, (new_caches if caches is not None else None), aux_total
@@ -387,7 +390,8 @@ def lm_step_ragged(cfg: ModelConfig, params: Params, tokens: jax.Array,
                    last_idx: jax.Array,
                    cu_seqlens: Optional[jax.Array] = None,
                    kernel_config=None,
-                   sampling: Optional[Dict[str, jax.Array]] = None
+                   sampling: Optional[Dict[str, jax.Array]] = None,
+                   tp_axis: Optional[str] = None
                    ) -> Tuple[jax.Array, Params]:
     """The token-level (ragged) serving step: one packed ``(T,)`` stream.
 
@@ -430,13 +434,19 @@ def lm_step_ragged(cfg: ModelConfig, params: Params, tokens: jax.Array,
     round-trip between logits and token, and the (lanes, V) tensor never
     leaves the device.  All five arrays are traced data, so sampling
     params can never trigger a retrace.
+
+    ``tp_axis`` — mesh axis name when this step runs inside ``shard_map``
+    over a KV-head-sharded page pool (``EngineCore(mesh=N)``): every
+    attention layer then attends its local head band against its local
+    pool shard and all-gathers the head axis (see ``layers.attn_apply``);
+    embed/norms/MLP/unembed/sampling run replicated and unchanged.
     """
     p_tok = jnp.asarray(pos, jnp.int32)
     x = L.embed_apply(cfg, params["embed"], tokens[None], p_tok[None])
     x, caches, _ = trunk_apply(cfg, params["trunk"], x, pos=p_tok[None],
                                caches=caches, cache_index=None, causal=True,
                                token_pages=token_pages, cu_seqlens=cu_seqlens,
-                               kernel_config=kernel_config)
+                               kernel_config=kernel_config, tp_axis=tp_axis)
     x = L.norm_apply(cfg, params["final_norm"], x)
     # (lanes,) gather BEFORE unembedding: the (T, V) logits tensor would be
     # the largest activation of the step; only lanes' last rows are needed.

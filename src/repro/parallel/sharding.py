@@ -234,6 +234,41 @@ def cache_specs(caches: Any, mesh: Mesh) -> Any:
         lambda kp, x: cache_pspec(path_str(kp), x.shape, mesh), caches)
 
 
+def pool_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Paged KV *pool* leaves: KV heads → tp, everything else replicated.
+
+    The pool reinterprets the cache batch dim as the page id (serving/
+    paged.py), so the serving mesh must NOT shard it — the page table, free
+    heap, refcounts and prefix-cache radix tree are host-global and name
+    physical pages every device must hold (its head-slice of).  Layout per
+    leaf kind (leading dims are period stacks, replicated):
+
+      k/v   (…, P+1, Hkv, ps, Dh) → heads on "model"
+      ks/vs (…, P+1, Hkv, ps)     → heads on "model" (scales ride their heads)
+
+    Unlike :func:`cache_pspec` there is no head-dim fallback: the sharded
+    ragged step slices q/k/v head *bands* to match the local pool shard, so
+    a non-dividing head count must fail engine validation, not silently
+    replicate one leaf.
+    """
+    leaf = path.rsplit("/", 1)[-1]
+    base = _CACHE_BASE_NDIM.get(leaf)
+    if base is None:
+        off = 1 if "periods" in path.split("/") else 0
+    else:
+        off = max(len(shape) - base, 0)
+    spec = [None] * len(shape)
+    if leaf in ("k", "v", "ks", "vs") and len(shape) - off >= 2:
+        spec[off + 1] = "tp"                     # KV heads
+    return fit_spec(tuple(spec), shape, mesh)
+
+
+def pool_specs(pool: Any, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpec for a PagedKVCache pool."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: pool_pspec(path_str(kp), x.shape, mesh), pool)
+
+
 # --------------------------------------------------------------------------
 # helpers
 # --------------------------------------------------------------------------

@@ -147,10 +147,30 @@ class EngineCore:
                  prefix_cache: bool = False,
                  cache_pages: Optional[int] = None, seed: int = 0,
                  speculative: bool = False, spec_k: int = 4,
-                 proposer: Any = None, kernel_config: Any = None):
+                 proposer: Any = None, kernel_config: Any = None,
+                 mesh: Any = None):
         if mode not in ("ragged", "padded"):
             raise ValueError(f"unknown EngineCore mode {mode!r}; "
                              f"expected 'ragged' or 'padded'")
+        # Tensor-parallel serving (opt-in): ``mesh`` is an int device count
+        # or a jax Mesh with a "model" axis.  The page pool's KV-head axis
+        # is sharded across it and the ragged step runs under shard_map —
+        # each device attends its head band against its local pool shard
+        # and one tiled all-gather rebuilds the head axis (HASTILY's
+        # reduce-and-gather; docs/architecture.md).  All host-side state —
+        # scheduler, page table, free heap, refcounts, prefix cache — is
+        # mesh-oblivious, and mesh 1 (or None) takes the exact
+        # single-device path: no shard_map, identical jaxpr.
+        self.mesh = self._resolve_mesh(mesh)
+        if self.mesh is not None:
+            n = self.mesh.shape["model"]
+            if mode != "ragged":
+                raise ValueError("mesh > 1 requires mode='ragged' (the "
+                                 "padded oracle step is single-device)")
+            if cfg.num_heads % n or cfg.num_kv_heads % n:
+                raise ValueError(
+                    f"mesh of {n} devices must divide num_heads="
+                    f"{cfg.num_heads} and num_kv_heads={cfg.num_kv_heads}")
         if speculative and mode != "ragged":
             # The verify step IS the ragged step (drafted rows ride the
             # packed stream); the padded block extracts last-row logits
@@ -173,6 +193,18 @@ class EngineCore:
         self.lanes = lanes
         self.max_len = max_len or num_pages * page_size
         self.kv = PagedKVCache(self.model, num_pages, page_size)
+        self._pool_specs = None
+        if self.mesh is not None:
+            # Shard the pool's KV-head axis; page ids stay whole on every
+            # device, so all host-side page accounting is untouched.
+            # Params are replicated once here (not per step call).
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.parallel.sharding import pool_specs, shard_tree
+            self._pool_specs = pool_specs(self.kv.pool, self.mesh)
+            self.kv.pool = shard_tree(self.kv.pool, self._pool_specs,
+                                      self.mesh)
+            self.params = jax.device_put(
+                params, NamedSharding(self.mesh, PartitionSpec()))
         # Shared-prefix KV reuse (opt-in): admission probes a radix cache of
         # page-aligned token blocks and grants resident pages for the hit
         # prefix; chunked prefill then starts at the first cold token.
@@ -222,6 +254,7 @@ class EngineCore:
                                          kv_len, q_len)
 
         kc = self.kernel_config
+        tp_axis = None if self.mesh is None else "model"
 
         def ragged_fn(params, pool, token_pages, toks, pos, last_idx, cu,
                       temperature, top_k, top_p, seed, counter):
@@ -233,13 +266,53 @@ class EngineCore:
                                  last_idx, cu_seqlens=cu, kernel_config=kc,
                                  sampling=dict(temperature=temperature,
                                                top_k=top_k, top_p=top_p,
-                                               seed=seed, counter=counter))
+                                               seed=seed, counter=counter),
+                                 tp_axis=tp_axis)
+
+        if self.mesh is not None:
+            # One shard_map around the whole step: pool leaves arrive as
+            # local head-band shards, everything else replicated.  The
+            # sampled tokens are a deterministic function of replicated
+            # inputs (the all-gather rebuilt the head axis before wo), so
+            # every device computes identical picks — out_specs P() is
+            # sound without a check pass (check=False: 0.4.x's rep checker
+            # cannot see through the kernel's custom calls).
+            from jax.sharding import PartitionSpec
+            from repro.parallel import compat
+            rep = PartitionSpec()
+            ragged_fn = compat.shard_map(
+                ragged_fn, mesh=self.mesh,
+                in_specs=(rep, self._pool_specs) + (rep,) * 10,
+                out_specs=(rep, self._pool_specs), check=False)
 
         # donated pool: every layer's row writes update in place instead of
         # copying the whole pool each step.
         self._step = jax.jit(step_fn, donate_argnums=(1,))
         self._ragged = (None if self.model.step_ragged is None
                         else jax.jit(ragged_fn, donate_argnums=(1,)))
+
+    @staticmethod
+    def _resolve_mesh(mesh):
+        """Normalise the ``mesh`` arg: None / 1 / a size-1 Mesh → None (the
+        exact single-device path — no shard_map anywhere near the graph);
+        an int N > 1 → a 1×N ``("model",)`` mesh over the first N devices;
+        a jax Mesh with a "model" axis passes through."""
+        if mesh is None:
+            return None
+        if isinstance(mesh, int):
+            if mesh <= 1:
+                return None
+            if len(jax.devices()) < mesh:
+                raise ValueError(
+                    f"mesh of {mesh} devices requested but only "
+                    f"{len(jax.devices())} visible (set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count for CPU tests)")
+            from repro.parallel import compat
+            return compat.make_mesh((mesh,), ("model",))
+        if "model" not in mesh.axis_names:
+            raise ValueError(f"serving mesh needs a 'model' axis, got "
+                             f"{mesh.axis_names}")
+        return mesh if mesh.size > 1 else None
 
     # ------------------------------------------------------------------ API
     def validate(self, req: Request) -> None:
@@ -522,6 +595,25 @@ class EngineCore:
     @property
     def pages_in_use(self) -> int:
         return self.kv.num_pages - len(self.kv.free)
+
+    @property
+    def mesh_size(self) -> int:
+        """Devices on the serving mesh's model axis (1 = single-device)."""
+        return 1 if self.mesh is None else int(self.mesh.shape["model"])
+
+    @property
+    def collective_bytes_per_token(self) -> int:
+        """Per-device bytes *received* by the step's collectives for each
+        token-row streamed: one tiled head all-gather per attention layer,
+        ``Hq · Dh · itemsize · (N−1)/N`` each.  Analytic (the dataflow has
+        exactly this one collective), so the bench can report collective
+        traffic without instrumenting the compiled step; 0 off-mesh."""
+        n = self.mesh_size
+        if n == 1:
+            return 0
+        per_layer = (self.cfg.num_heads * self.cfg.d_head
+                     * jnp.dtype(self.cfg.dtype).itemsize)
+        return self.cfg.num_layers * per_layer * (n - 1) // n
 
     @property
     def prefix_stats(self) -> dict:

@@ -201,21 +201,33 @@ def sample_rows(logits: jax.Array, temperature: jax.Array,
 
     def drawn(_):
         t = jnp.where(temperature > 0.0, temperature, 1.0)[:, None]
-        x = logits / t
-        # top-k: keep the k largest logits (k-th-largest threshold)
-        k = jnp.clip(jnp.where(top_k > 0, top_k, v), 1, v)
-        kth = jnp.take_along_axis(jnp.sort(x, axis=-1), (v - k)[:, None],
-                                  axis=-1)
+        # Max-shift BEFORE the divide: raw logits / t overflows to ±inf as
+        # t → 0+, and a non-finite score poisons lut_log_softmax.  Shifted
+        # scores live in [-big, 0]; any -inf from the divide itself is
+        # clamped to NEG_INF.  The shift is a per-row monotone map, so
+        # top-k thresholds, nucleus order and the greedy pick are the same
+        # token sets.
+        x = jnp.maximum(
+            (logits - jnp.max(logits, axis=-1, keepdims=True)) / t, NEG_INF)
+        # top-k: keep the k largest logits (k-th-largest threshold);
+        # k ≥ V keeps every token — bit-identical to no mask at all
+        kth = jnp.take_along_axis(
+            jnp.sort(x, axis=-1),
+            (v - jnp.clip(jnp.where(top_k > 0, top_k, v), 1, v))[:, None],
+            axis=-1)
         x = jnp.where(x >= kth, x, NEG_INF)
         # top-p: smallest prefix of the sorted LUT-softmax distribution
         # with mass ≥ p (a token survives while the mass strictly before
-        # it is < p, so the head token always does)
+        # it is < p, so the head token always does).  p == 1 must keep the
+        # whole vocabulary: the cumulative sum's float rounding can reach
+        # 1.0 a couple of tokens early, so the disable value is tested
+        # explicitly instead of through the mass comparison.
         order = jnp.argsort(-x, axis=-1)
         probs = jnp.take_along_axis(lut_softmax(x, axis=-1, exp_fn=exp_fn),
                                     order, axis=-1)
         csum = jnp.cumsum(probs, axis=-1)
         p = jnp.clip(jnp.asarray(top_p, jnp.float32), 0.0, 1.0)[:, None]
-        keep_sorted = (csum - probs) < p
+        keep_sorted = ((csum - probs) < p) | (p >= 1.0)
         keep = jnp.zeros((n, v), bool).at[
             jnp.arange(n)[:, None], order].set(keep_sorted)
         # Gumbel-max categorical over the LUT log-softmax scores, one

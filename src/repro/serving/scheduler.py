@@ -271,6 +271,12 @@ class Scheduler:
         for run in self.running:
             if run.req.uid == uid:
                 self.running.remove(run)
+                # A drafting lane's table may still cover the speculative
+                # worst case (cursor + 1 + k rows): route the surplus
+                # through uncommit FIRST, so the free heap and refcounts
+                # match a never-drafted twin and _publish can never see a
+                # page past the committed cursor.
+                run.pages = self.kv.uncommit(run.pages, run.rows)
                 self._publish(run)
                 self.kv.release(run.pages)
                 run.pages = []
@@ -287,10 +293,19 @@ class Scheduler:
     # ------------------------------------------------------------- internal
     def _publish(self, run: RunningRequest) -> None:
         """Publish ``run``'s full resident pages into the prefix cache,
-        keyed by the tokens whose KV rows they hold."""
+        keyed by the tokens whose KV rows they hold.
+
+        Cursor-clamped: only pages whose EVERY row the engine committed
+        (``rows // page_size`` of them) are eligible — a mid-prefill abort
+        leaves a table covering granted-but-unwritten rows, and publishing
+        such a page would serve uncomputed KV to the next hit on the same
+        prefix.  (``insert`` also keys by ``rows`` tokens; the explicit
+        slice makes the publish safe even if the two ever disagree.)"""
         if self.cache is None or run.rows < self.kv.page_size:
             return
-        self.cache.insert(run.req.known_tokens()[:run.rows], run.pages)
+        full = run.rows // self.kv.page_size
+        self.cache.insert(run.req.known_tokens()[:run.rows],
+                          run.pages[:full])
 
     def _preempt_youngest(self, older_than: int) -> bool:
         """Evict the youngest resident request with ticket > ``older_than``;

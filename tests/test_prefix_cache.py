@@ -451,6 +451,51 @@ def test_cow_isolates_writers_from_cached_pages():
     check_pool(eng.kv, eng.prefix_cache)
 
 
+def test_mid_prefill_abort_publishes_only_committed_pages():
+    """Publish cursor-clamp regression: abort a request mid-prefill, at a
+    row count that is NOT page-aligned, so its table's last page holds
+    granted-but-unwritten rows.  Only pages whose *every* row the engine
+    committed may reach the radix cache — a leaked partial page would
+    serve garbage KV rows to the next request sharing the prefix.  The
+    proof is end-to-end: a later identical prompt through the warm cache
+    must be token-identical to a cold engine."""
+    cfg, params = build()
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, 3 * PS + 4).astype(np.int32)
+
+    def cold(uid):
+        eng = EngineCore(cfg, params, lanes=1, page_size=PS, num_pages=32,
+                         chunk_size=PS)
+        eng.submit(Request(uid=uid, prompt=prompt, max_new=4))
+        return drain(eng)[0][uid]
+
+    # chunk 12 straddles the 8-row page: one step commits page 0 fully and
+    # page 1 halfway — the abort lands with rows=12, table covering 16
+    eng = EngineCore(cfg, params, lanes=1, page_size=PS, num_pages=32,
+                     chunk_size=12, prefix_cache=True)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=4))
+    eng.step()
+    run = eng.scheduler.running[0]
+    rows = run.rows
+    assert 0 < rows < len(prompt) and rows % PS != 0, \
+        "abort point must be mid-prefill and mid-page"
+    assert len(run.pages) > rows // PS, \
+        "table must already cover granted-but-unwritten rows"
+    assert eng.abort(0)
+    check_pool(eng.kv, eng.prefix_cache)
+    assert eng.prefix_cache.cached_pages == rows // PS, \
+        "abort published a page past the committed cursor"
+
+    # the warm re-serve hits exactly the committed pages and matches cold
+    eng.submit(Request(uid=1, prompt=prompt, max_new=4))
+    got, outs = drain(eng)
+    assert sum(o.prefix_hit_tokens for o in outs) == (rows // PS) * PS, \
+        "the committed page was never reused — test is vacuous"
+    assert got[1] == cold(1), \
+        "a partially-written published page corrupted the warm stream"
+    check_pool(eng.kv, eng.prefix_cache)
+
+
 # ------------------------------------------- no-prefill-work guarantee --
 
 @pytest.mark.parametrize("kv_quant", [False, True])

@@ -225,6 +225,94 @@ def test_slot_engine_oracle_shares_sampling_semantics():
     assert slot.run()[0].tokens == core
 
 
+# ------------------------------------------------------- degenerate params --
+
+def _rows(seed=0, n=16, v=33):
+    """Random rows plus the adversarial shapes: exact ties, a flat row, a
+    one-token-dominant row (cumsum rounding pressure), NEG_INF-ish tails."""
+    rng = np.random.default_rng(seed)
+    lg = rng.normal(size=(n, v)).astype(np.float32)
+    lg[0, :] = 0.0                                  # all tied
+    lg[1, 5] = lg[1, 20] = lg[1].max() + 1.0        # joint maxima
+    lg[2, 7] += 40.0                                # ~all mass on one token
+    lg[3, :10] = -1e30                              # hard-masked head
+    return lg
+
+
+def _picks(lg, *, temps, top_k=0, top_p=1.0, seed=0):
+    n, v = lg.shape
+    return np.asarray(sample_rows(
+        lg, np.full((n,), temps, np.float32),
+        np.full((n,), top_k, np.int32), np.full((n,), top_p, np.float32),
+        np.full((n,), seed, np.uint32), np.arange(n, dtype=np.int32)))
+
+
+@pytest.mark.parametrize("top_k", [33, 40])      # k == V and k > V
+def test_top_k_at_least_vocab_is_bit_identical_to_no_mask(top_k):
+    """k ≥ V keeps the k-th-largest threshold at the row minimum, so the
+    mask keeps every token: the drawn stream is BIT-identical to top_k
+    disabled on the same seeds — exactly no-op, not almost-surely."""
+    lg = _rows()
+    for seed in (0, 3, 11, 2 ** 31):
+        for temps in (0.7, 1.3):
+            a = _picks(lg, temps=temps, top_k=top_k, seed=seed)
+            b = _picks(lg, temps=temps, top_k=0, seed=seed)
+            assert (a == b).all(), (top_k, seed, temps, a, b)
+
+
+def test_top_p_one_keeps_the_whole_vocabulary():
+    """p == 1.0 disables the nucleus mask *explicitly*: the cumulative
+    sum's float rounding may touch 1.0 before the last sorted token (the
+    dominant-token and hard-masked rows above push it there), and the
+    mass-comparison alone would then drop positive-probability tail
+    tokens.  The engine encodes top_p=None as 1.0, so the explicit-1.0
+    request must ride the identical pipeline bit for bit."""
+    lg = _rows()
+    for seed in (0, 7, 123):
+        a = _picks(lg, temps=1.1, top_p=1.0, seed=seed)
+        b = _picks(lg, temps=1.1, top_p=np.float32(1.0), seed=seed)
+        assert (a == b).all()
+        assert ((0 <= a) & (a < lg.shape[1])).all()
+
+
+@pytest.mark.parametrize("tiny", [1e-30, 1e-8, 1e-4])
+def test_tiny_temperature_stays_finite_and_greedy_in_the_limit(tiny):
+    """temperature → 0+ must not overflow: raw logits / t reaches ±inf at
+    t = 1e-30 and a non-finite score poisons ``lut_log_softmax`` (NaN
+    scores argmax to index 0, silently).  The max-shift keeps scaled
+    scores in [-big, 0], so the draw is finite and — with the winner's
+    scaled gap astronomically larger than any Gumbel noise — lands on the
+    greedy token, which is NOT index 0 in these rows."""
+    lg = _rows()
+    want = np.asarray(greedy_rows(lg))
+    assert (want[1:4] != 0).any()
+    for seed in (0, 5, 99):
+        got = _picks(lg, temps=tiny, seed=seed)
+        # ties (rows 0–1) may legitimately break off-index under noise at
+        # the larger tiny temps; the non-tied rows must be exactly greedy
+        assert (got[2:] == want[2:]).all(), (tiny, seed, got, want)
+
+
+@pytest.mark.parametrize("edge", ["top_k_full", "top_k_over", "top_p_one"])
+def test_degenerate_mask_params_noop_end_to_end(edge):
+    """Engine-level contract: an explicit top_k ≥ vocab or top_p = 1.0 in
+    SamplingParams serves the same stream as the plain temperature-only
+    request — the knobs are exact no-ops all the way through submit."""
+    cfg, params = build()
+    kw = {"top_k_full": dict(top_k=cfg.vocab_size),
+          "top_k_over": dict(top_k=cfg.vocab_size + 9),
+          "top_p_one": dict(top_p=1.0)}[edge]
+    p = prompts_for(cfg, 6, (9,))[0]
+
+    def stream(extra):
+        return serve(engine(cfg, params),
+                     [Request(uid=0, prompt=p, max_new=6,
+                              sampling=SamplingParams(temperature=0.9,
+                                                      seed=17, **extra))])[0]
+
+    assert stream(kw) == stream({})
+
+
 # ---------------------------------------------------------- stop sequences --
 
 def _greedy_stream(cfg, params, prompt, max_new, **kw):

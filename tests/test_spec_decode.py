@@ -306,6 +306,43 @@ def test_rejected_drafts_leave_pool_identical_to_never_drafting():
     assert spec.pages_in_use == plain.pages_in_use == 0
 
 
+def test_abort_after_drafting_leaves_pool_identical_to_never_drafting():
+    """Abort arm of the twin test: cancel the resident request right after
+    a drafting step — the instant a lane's page table may still cover the
+    speculative worst case (cursor + 1 + draft rows).  ``abort`` must
+    route the surplus through ``uncommit`` before publish/release, so the
+    refcounts and free heap stay identical to the never-drafted twin
+    *through* the abort, the survivors drain token-identically, and the
+    pool empties.  Same single-lane lockstep discipline as above."""
+    cfg, params, want, _ = _baseline(False, "ragged")
+    prompts = _prompts(cfg)
+    prop = ScriptedProposer(_truth(cfg, want), cfg.vocab_size,
+                            corrupt=lambda i, d: 0)
+    plain = EngineCore(cfg, params, lanes=1, page_size=PS,
+                       num_pages=PAGES, chunk_size=CHUNK, mode="ragged")
+    spec = _spec_engine(cfg, params, prop, k=4, lanes=1)
+    for i, p in enumerate(prompts):
+        plain.submit(Request(uid=i, prompt=p, max_new=MAX_NEW))
+        spec.submit(Request(uid=i, prompt=p, max_new=MAX_NEW))
+    aborted = None
+    while plain.scheduler.has_work() or spec.scheduler.has_work():
+        plain.step()
+        out = spec.step()
+        if aborted is None and out.drafted_tokens:
+            aborted = spec.scheduler.running[0].req.uid
+            assert spec.abort(aborted) and plain.abort(aborted)
+        assert spec.kv.ref == plain.kv.ref
+        assert sorted(spec.kv.free) == sorted(plain.kv.free)
+        assert ([(r.req.uid, r.rows, r.pages)
+                 for r in spec.scheduler.running]
+                == [(r.req.uid, r.rows, r.pages)
+                    for r in plain.scheduler.running])
+    assert aborted is not None, "abort arm never drafted"
+    survivors = {u: t for u, t in want.items() if u != aborted}
+    assert by_uid(spec.finished) == by_uid(plain.finished) == survivors
+    assert spec.pages_in_use == plain.pages_in_use == 0
+
+
 # ------------------------------------------- scheduler chunk-aware packing --
 
 def _rng_proposer(rng, vocab):
