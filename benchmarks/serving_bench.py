@@ -1,8 +1,12 @@
 """Serving benchmarks: engines, decode A/B, prefill TTFT, prefix reuse.
 
-Six families, all emitted as CSV rows (``benchmarks.run``) *and* as a
+Eight families, all emitted as CSV rows (``benchmarks.run``) *and* as a
 machine-readable ``BENCH_serving.json`` so the perf trajectory is tracked
-across PRs:
+across PRs.  Every EngineCore aggregate — step latency percentiles,
+mixed-step counts, prefix hit rates, speculative acceptance, engine and
+server TTFT/TPOT — is read back from the engine's own metrics registry
+(``repro.serving.metrics``) via snapshot/delta windows; the bench
+re-derives nothing the serving stack already counts.
 
 1. **Engine throughput** — slot-contiguous vs the request-level
    ``EngineCore`` in BOTH packings (the PR-3 padded ``(lanes, C)`` block
@@ -72,7 +76,17 @@ across PRs:
    streaming TTFT p50 ≤ the batch driver's (spreading arrivals over the
    window the engine needs anyway must not cost first-token latency).
 
-7. **Sharded serving** — the tensor-parallel engine (PR 9): identical
+7. **Observability overhead** — metrics-on vs metrics-off engines on
+   identical mixed traffic.  The registry/tracing layer is host-side
+   python on the step boundary, so it must cost ~nothing next to a
+   jitted step; nightly CI asserts the on/off tok/s ratio ≥ 0.98.  The
+   serve-loop family additionally arms the **retrace sentinel**
+   (``mark_warm`` + one measured pass per arm) and records
+   ``retraces_after_warm`` — nightly CI pins it at 0, so a mid-traffic
+   jit recompile (the PR 8 table-width-shrink class of bug) fails the
+   build instead of silently costing a ~2 s stall.
+
+8. **Sharded serving** — the tensor-parallel engine (PR 9): identical
    mixed traffic served at mesh 1 vs mesh 2, tok/s plus the analytic
    per-token / per-step all-gather bytes at each width.  The backend pins
    its device count at first jax init (1 on CPU), so this arm runs in a
@@ -160,15 +174,25 @@ def _mixed_requests(vocab: int, tiny: bool, seed: int = 7):
 
 def _instrumented_drain(engine, requests, rows_in_use,
                         core: bool = False) -> Dict[str, Any]:
-    """Drain traffic, timing every step and tracking cache pressure.  With
-    ``core=True`` the engine is an EngineCore and per-step StepOutput
-    accounting (mixed chunked-prefill+decode batches) is recorded too."""
+    """Drain traffic and report per-pass aggregates.
+
+    ``core=True``: the engine is an EngineCore and every aggregate —
+    step-latency percentiles, mixed-step counts, live/padded rows, peak
+    pool pages — is read back from the engine's own metrics registry
+    (``snapshot()``/``delta()`` windows over the lifetime counters plus a
+    count-offset window over the ``step_latency_ms`` histogram), not
+    recomputed bench-side.  ``rows_in_use`` is only sampled for the slot
+    engine, which carries no registry."""
     for r in requests:
         engine.submit(r)
+    if core:
+        obs = engine.obs
+        snap = obs.registry.snapshot()
+        step_n0 = obs.h_step_ms.count()
+        obs.reset_peaks()
     lat: List[float] = []
     peak_rows = 0
-    steps = mixed_steps = prefill_toks = decode_toks = 0
-    live_rows = padded_rows = 0
+    steps = 0
 
     def busy():
         if core:
@@ -177,31 +201,36 @@ def _instrumented_drain(engine, requests, rows_in_use,
 
     t0 = time.perf_counter()
     while busy():
-        s0 = time.perf_counter()
-        out = engine.step()
-        lat.append((time.perf_counter() - s0) * 1e3)
-        peak_rows = max(peak_rows, rows_in_use(engine))
-        steps += 1
         if core:
-            mixed_steps += int(out.mixed)
-            prefill_toks += out.prefill_tokens
-            decode_toks += out.decode_tokens
-            live_rows += out.live_rows
-            padded_rows += out.padded_rows
+            engine.step()
+        else:
+            s0 = time.perf_counter()
+            engine.step()
+            lat.append((time.perf_counter() - s0) * 1e3)
+            peak_rows = max(peak_rows, rows_in_use(engine))
+        steps += 1
         if steps > 10_000:
             raise RuntimeError("serving did not drain")
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in engine.finished)
     engine.finished.clear()             # engine is reused across passes
-    res = {"tok_s": toks / dt, "tokens": toks, "steps": steps,
-           "step_ms_p50": _pct(lat, 50), "step_ms_p95": _pct(lat, 95),
-           "peak_cache_rows": int(peak_rows)}
-    if core:
-        res.update(mixed_steps=mixed_steps, prefill_tokens=prefill_toks,
-                   decode_tokens=decode_toks,
-                   live_rows=live_rows, padded_rows=padded_rows,
-                   padding_efficiency=live_rows / max(padded_rows, 1))
-    return res
+    if not core:
+        return {"tok_s": toks / dt, "tokens": toks, "steps": steps,
+                "step_ms_p50": _pct(lat, 50), "step_ms_p95": _pct(lat, 95),
+                "peak_cache_rows": int(peak_rows)}
+    d = obs.registry.delta(snap)
+    live, padded = int(d["live_rows_total"]), int(d["padded_rows_total"])
+    return {"tok_s": toks / dt, "tokens": toks,
+            "steps": int(d["steps_total"]),
+            "step_ms_p50": obs.h_step_ms.percentile(0.50, skip=step_n0),
+            "step_ms_p95": obs.h_step_ms.percentile(0.95, skip=step_n0),
+            "peak_cache_rows":
+                int(obs.g_pool_peak.value() * engine.kv.page_size),
+            "mixed_steps": int(d["mixed_steps_total"]),
+            "prefill_tokens": int(d["prefill_tokens_total"]),
+            "decode_tokens": int(d["decode_tokens_total"]),
+            "live_rows": live, "padded_rows": padded,
+            "padding_efficiency": live / max(padded, 1)}
 
 
 def _engine_results(tiny: bool) -> Dict[str, Any]:
@@ -547,18 +576,13 @@ class _JunkProposer:
 
 
 def _spec_drain(eng, requests) -> Dict[str, Any]:
-    """Drain one pass and attach the pass's speculative deltas (the
-    engine's counters are lifetime; passes are diffed)."""
-    d0, a0, s0 = eng.drafted_total, eng.accepted_total, eng.spec_steps
+    """Drain one pass and attach the pass's speculative deltas — a
+    registry window (``spec_window``/``spec_summary``), not bench-side
+    diffing of engine attributes."""
+    since = eng.obs.spec_window()
     res = _instrumented_drain(
         eng, requests, lambda e: e.pages_in_use * e.kv.page_size, core=True)
-    res["drafted_tokens"] = eng.drafted_total - d0
-    res["accepted_tokens"] = eng.accepted_total - a0
-    res["spec_steps"] = eng.spec_steps - s0
-    res["acceptance"] = (res["accepted_tokens"]
-                         / max(res["drafted_tokens"], 1))
-    res["accepted_per_spec_step"] = (res["accepted_tokens"]
-                                     / max(res["spec_steps"], 1))
+    res.update(eng.obs.spec_summary(since))
     return res
 
 
@@ -693,11 +717,15 @@ def _prefix_reuse_results(tiny: bool) -> Dict[str, Any]:
     ttft(10_000, rng.integers(0, cfg.vocab_size,
                               shared_len + tail_len).astype(np.int32))
     cold_ms = ttft(0, prompt_for(0))              # first sharer: cache miss
-    h0, l0 = eng.prefix_cache.hit_tokens, eng.prefix_cache.lookup_tokens
+    r = eng.obs.registry
+    snap = r.snapshot()                           # warm-phase window anchor
     warm_ms = [ttft(uid, prompt_for(uid)) for uid in range(1, 1 + n_warm)]
-    stats = eng.prefix_stats
-    warm_known = stats["lookup_tokens"] - l0
-    hit_rate = (stats["hit_tokens"] - h0) / max(warm_known, 1)
+    # Every reuse aggregate comes straight from the metrics registry: the
+    # hit rate is a counter ratio over the warm-phase window, the page
+    # telemetry the lifetime counters/gauges the cache itself maintains.
+    hit_rate = r.ratio("prefix_hit_tokens_total",
+                       "prefix_lookup_tokens_total", since=snap)
+    hit_toks = r.delta(snap)["prefix_hit_tokens_total"]
 
     return {"page_size": page, "chunk_size": chunk, "num_pages": num_pages,
             "kernel_config": eng.kernel_config.describe(),
@@ -707,11 +735,11 @@ def _prefix_reuse_results(tiny: bool) -> Dict[str, Any]:
             "warm_ttft_ms_median": _pct(warm_ms, 50),
             "ttft_speedup_warm_vs_cold": cold_ms / _pct(warm_ms, 50),
             "prefix_hit_rate": hit_rate,
-            "prefix_hit_tokens": int(stats["hit_tokens"] - h0),
-            "pages_shared": int(stats["shared_page_grants"]),
-            "cached_pages": int(stats["cached_pages"]),
-            "cow_copies": int(stats["cow_copies"]),
-            "evicted_pages": int(stats["evicted_pages"])}
+            "prefix_hit_tokens": int(hit_toks),
+            "pages_shared": int(r.value("prefix_shared_page_grants_total")),
+            "cached_pages": int(r.value("prefix_cached_pages")),
+            "cow_copies": int(r.value("cow_copies_total")),
+            "evicted_pages": int(r.value("prefix_evicted_pages_total"))}
 
 
 # --------------------------------------------------------------- serve loop --
@@ -790,9 +818,11 @@ def _serve_loop_results(tiny: bool) -> Dict[str, Any]:
         return summary
 
     def batch_pass(seed: int) -> Tuple[Dict[str, Any], float]:
+        """Submit-all-then-drain; TTFT/TPOT are the engine-side
+        ``request_ttft_ms`` / ``request_tpot_ms`` histograms (windowed by
+        observation count), not re-derived from per-step polling."""
         reqs = _serve_traffic(cfg.vocab_size, n, max_new, seed)
-        first: Dict[int, float] = {}
-        fin: Dict[int, float] = {}
+        window = eng.obs.engine_window()
         t0 = time.perf_counter()
         for r in reqs:
             eng.submit(r)
@@ -800,21 +830,11 @@ def _serve_loop_results(tiny: bool) -> Dict[str, Any]:
         while eng.scheduler.has_work():
             eng.step()
             steps += 1
-            now = time.perf_counter()
-            for r in reqs:
-                if r.tokens and r.uid not in first:
-                    first[r.uid] = now
-                if r.done and r.uid not in fin:
-                    fin[r.uid] = now
         elapsed = time.perf_counter() - t0
         eng.finished.clear()
-        ttft = sorted((first[u] - t0) * 1e3 for u in first)
-        tpot = [(fin[r.uid] - first[r.uid]) / (len(r.tokens) - 1) * 1e3
-                for r in reqs if len(r.tokens) > 1]
-        return ({"req_s": n / elapsed, "steps": steps,
-                 "ttft_ms_p50": _pct(ttft, 50),
-                 "ttft_ms_p99": _pct(ttft, 99),
-                 "tpot_ms": float(np.mean(tpot)) if tpot else 0.0}, elapsed)
+        res = {"req_s": n / elapsed, "steps": steps}
+        res.update(eng.obs.engine_latency_summary(window))
+        return res, elapsed
 
     drain(_serve_traffic(cfg.vocab_size, n, max_new, seed=0))   # warm jits
 
@@ -839,12 +859,89 @@ def _serve_loop_results(tiny: bool) -> Dict[str, Any]:
         stream = stream_pass(seed=1, rate=rate)
         if eng.trace_count == c0:
             break
+
+    # --- retrace sentinel: both arms just proved trace-stable, so arm the
+    # registry's retrace counter and run one final *measured* pass per
+    # arm.  Any jit trace from here is a shape-stability regression (the
+    # PR 8 table-width-shrink class of bug); nightly CI pins this at 0.
+    eng.obs.mark_warm()
+    batch, _ = batch_pass(seed=1)
+    stream = stream_pass(seed=1, rate=rate)
+    retraces = int(eng.obs.registry.value("step_retraces_total"))
     return {"page_size": page, "lanes": lanes, "requests": n,
             "max_new": max_new, "num_pages": num_pages,
             "poisson_rate_req_s": rate,
             "batch": batch, "stream": stream,
+            "retraces_after_warm": retraces,
             "ttft_p50_ratio_stream_vs_batch":
                 stream["ttft_ms_p50"] / max(batch["ttft_ms_p50"], 1e-9)}
+
+
+# ------------------------------------------------------------ observability --
+
+def _observability_results(tiny: bool) -> Dict[str, Any]:
+    """Metrics-on vs metrics-off engines on identical mixed traffic.
+
+    The observability layer is host-side python on the step boundary —
+    counter bumps, a ring append, gauge writes — so it must be invisible
+    next to a jitted model step.  Two otherwise-identical ragged engines
+    (one ``metrics=True``, one ``metrics=False``) serve the same traffic;
+    both repeat until a pass compiles nothing new, then best-of-3 tok/s
+    each, the passes interleaved so machine drift hits both arms alike.
+    ``overhead_ratio`` = on/off; the nightly job asserts ≥ 0.98 (≤ 2%
+    overhead) at full scale.  At tiny scale a step is sub-millisecond,
+    which magnifies the fixed ~tens-of-µs host-side bookkeeping far
+    beyond its share at any real step time, so tiny gets the
+    noise-tolerant 0.8 floor instead (same stance as the
+    adversarial-spec ratio).
+    """
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import EngineCore
+
+    page = 8 if tiny else 16
+    lanes = 4 if tiny else 16
+    max_len = 128 if tiny else 1024
+    num_pages = (2 if tiny else 4) * max_len // page
+    cfg = get_config("deepseek-7b-smoke")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+    def engine(metrics: bool):
+        return EngineCore(cfg, params, lanes=lanes, page_size=page,
+                          num_pages=num_pages, max_len=max_len,
+                          chunk_size=2 * page, mode="ragged",
+                          metrics=metrics)
+
+    eng_on, eng_off = engine(True), engine(False)
+
+    def drain(eng, seed: int) -> float:
+        for r in _mixed_requests(cfg.vocab_size, tiny, seed=seed):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        while eng.scheduler.has_work():
+            eng.step()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.tokens) for r in eng.finished)
+        eng.finished.clear()
+        return toks / dt
+
+    for _ in range(2 if tiny else 3):            # retire the compile keys
+        a0, b0 = eng_on.trace_count, eng_off.trace_count
+        drain(eng_on, seed=7)
+        drain(eng_off, seed=7)
+        if eng_on.trace_count == a0 and eng_off.trace_count == b0:
+            break
+    ons, offs = [], []
+    for _ in range(3):                           # interleave the arms
+        ons.append(drain(eng_on, seed=7))
+        offs.append(drain(eng_off, seed=7))
+    on, off = max(ons), max(offs)
+    return {"tiny": tiny,
+            "page_size": page, "lanes": lanes, "num_pages": num_pages,
+            "metrics_on_tok_s": on, "metrics_off_tok_s": off,
+            "overhead_ratio": on / off,
+            "registry_families": len(eng_on.obs.registry.names()),
+            "ring_len": len(eng_on.obs.ring)}
 
 
 # ----------------------------------------------------------------- driver --
@@ -893,10 +990,15 @@ def arm(mesh):
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in reqs)
     per_tok = eng.collective_bytes_per_token
+    # Measured (not analytic) per-step collective bytes: an AOT
+    # lower+compile of the sharded step at the widest bucket, walked by
+    # launch/hlo_analysis.  0 at mesh 1 (no collectives to count).
+    measured = eng.measure_collective_bytes()
     return {{"mesh": eng.mesh_size, "tok_s": toks / dt, "steps": steps,
              "tokens": toks, "live_rows": rows,
              "collective_bytes_per_token": per_tok,
              "collective_bytes_per_step": per_tok * rows // max(steps, 1),
+             "collective_bytes_per_step_measured": measured,
              "traces": eng.trace_count}}
 
 out = {{"mesh1": arm(None), "mesh2": arm(2)}}
@@ -935,6 +1037,7 @@ def run_serving(tiny: bool = False) -> Dict[str, Any]:
             "speculative": _speculative_results(tiny),
             "prefix_reuse": _prefix_reuse_results(tiny),
             "serve_loop": _serve_loop_results(tiny),
+            "observability": _observability_results(tiny),
             "sharded": _sharded_results(tiny)}
 
 
@@ -1062,6 +1165,16 @@ def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
            sl["ttft_p50_ratio_stream_vs_batch"],
            "streaming vs batch TTFT p50, same warm engine + traffic "
            "(CI floor: <= 1)")
+    yield ("serving/serve_loop_retraces_after_warm",
+           float(sl["retraces_after_warm"]),
+           "jit traces during the measured post-warm batch+stream passes "
+           "(retrace sentinel; nightly CI pins this at 0)")
+    ob = results["observability"]
+    yield ("serving/obs_overhead_ratio", ob["overhead_ratio"],
+           f"metrics-on / metrics-off tok/s on identical mixed traffic "
+           f"({ob['metrics_on_tok_s']:.4g} vs {ob['metrics_off_tok_s']:.4g}"
+           f"; nightly CI floor 0.98 full / 0.8 tiny — sub-ms tiny steps "
+           f"magnify the fixed host-side cost)")
     sh = results["sharded"]
     yield ("serving/sharded_tok_s_mesh1", sh["mesh1"]["tok_s"],
            f"single-device ragged engine in the 2-device subprocess "
@@ -1076,6 +1189,11 @@ def rows_from(results: Dict[str, Any]) -> Iterator[Row]:
            f"analytic all-gather bytes received per device per token row "
            f"at mesh 2 (per step: {sh['mesh2']['collective_bytes_per_step']}"
            f" B; mesh 1: {sh['mesh1']['collective_bytes_per_token']} B)")
+    yield ("serving/sharded_collective_bytes_per_step_measured",
+           float(sh["mesh2"]["collective_bytes_per_step_measured"]),
+           "per-device collective bytes per widest-bucket step, counted "
+           "from the compiled HLO (launch/hlo_analysis walk; nightly CI "
+           "asserts > 0 at mesh 2)")
 
 
 def bench_paged_serving() -> Iterator[Row]:

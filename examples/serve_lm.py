@@ -4,7 +4,10 @@ Spawns an :class:`AsyncLMServer` around the request-level EngineCore and a
 handful of streaming clients — tokens print as they arrive, per-request
 sampling params (temperature / top-k / top-p / seed / stop sequences) ride
 each request, and one client cancels mid-stream to show pages being freed
-for the survivors.
+for the survivors.  After the drain it prints each request's lifecycle
+span (submitted → admitted → first_token → finished/aborted, with event
+offsets) and a snapshot of the engine's metrics registry — the same
+counters ``/metrics`` and ``--metrics-json`` expose on the launcher.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch deepseek-7b-smoke]
       PYTHONPATH=src python examples/serve_lm.py --temperature 0.8 \
@@ -148,9 +151,35 @@ def main():
           f"{summary['cancelled']} cancelled")
     print(f"pool after drain: {engine.pages_in_use} pages in use "
           f"(cancelled pages were freed mid-serve)")
+
+    # Per-request lifecycle spans, straight from the engine's tracer: each
+    # event at its offset from the request's own submit.
+    print("request spans (ms from submit):")
     for r, toks in zip(reqs, results):
+        span = engine.obs.tracer.span(r.uid)
         tag = " (cancelled)" if r.uid == cancel_uid else ""
-        print(f"  req {r.uid:2d}{tag}: {toks}")
+        if span is None:
+            print(f"  req {r.uid:2d}{tag}: no span recorded")
+            continue
+        tl = " -> ".join(
+            f"{e.name}@{(e.t - span.start_t) * 1e3:.1f}"
+            for e in span.events)
+        print(f"  req {r.uid:2d}{tag} [{span.status}] {tl}")
+        print(f"           tokens: {toks}")
+
+    # Final registry snapshot — the same counters /metrics and
+    # --metrics-json expose; print the serving-salient ones.
+    reg = engine.obs.registry
+    print("registry snapshot:")
+    for name in ("steps_total", "mixed_steps_total", "step_traces_total",
+                 "tokens_generated_total", "requests_finished_total",
+                 "requests_aborted_total", "stream_cancelled_total",
+                 "pool_pages_in_use_peak", "step_latency_ms"):
+        print(f"  {name} = {reg.value(name):g}")
+    ttft = engine.obs.h_ttft_ms
+    if ttft.count():
+        print(f"  request_ttft_ms p50/p99 = "
+              f"{ttft.percentile(0.5):.1f} / {ttft.percentile(0.99):.1f}")
 
 
 if __name__ == "__main__":

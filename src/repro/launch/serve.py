@@ -24,7 +24,8 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import (AsyncLMServer, EngineCore, Request,
                            SamplingParams, ServingEngine,
-                           UnsupportedCacheLayout)
+                           UnsupportedCacheLayout, start_metrics_server,
+                           write_metrics_json)
 
 
 def _parse_stop(spec: str):
@@ -69,9 +70,24 @@ def _run_async(eng, args, cfg) -> None:
     async def main():
         server = AsyncLMServer(eng, max_waiting=args.max_waiting,
                                admission=args.admission)
-        async with server:
-            await asyncio.gather(*[
-                client(server, r, float(d)) for r, d in zip(reqs, arrivals)])
+        # /metrics + /metrics.json off this very loop (--metrics-port):
+        # the scrape endpoint shares the process with the serve loop and
+        # reads the same registry summary() reports from.
+        exporter = None
+        if args.metrics_port is not None:
+            exporter = await start_metrics_server(server.obs.registry,
+                                                  port=args.metrics_port)
+            port = exporter.sockets[0].getsockname()[1]
+            print(f"metrics: http://127.0.0.1:{port}/metrics")
+        try:
+            async with server:
+                await asyncio.gather(*[
+                    client(server, r, float(d))
+                    for r, d in zip(reqs, arrivals)])
+        finally:
+            if exporter is not None:
+                exporter.close()
+                await exporter.wait_closed()
         return server.summary()
 
     t0 = time.perf_counter()
@@ -141,6 +157,19 @@ def main() -> None:
     ap.add_argument("--batch", action="store_true",
                     help="synchronous submit-all-then-drain driver instead "
                          "of the async serve loop")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write a JSON snapshot of the metrics registry "
+                         "on exit")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="serve GET /metrics (Prometheus text) and "
+                         "/metrics.json on 127.0.0.1:N off the serve "
+                         "loop's own asyncio loop (0 = ephemeral port; "
+                         "async driver only)")
+    ap.add_argument("--profile-steps", type=int, default=None, metavar="N",
+                    help="capture a jax.profiler trace window around the "
+                         "next N engine steps")
+    ap.add_argument("--profile-dir", default="/tmp/jax-trace",
+                    help="jax.profiler trace output dir (--profile-steps)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -174,10 +203,19 @@ def main() -> None:
                             max_len=args.max_len)
         slot = True
 
+    if args.profile_steps and not slot:
+        eng.obs.arm_profiler(args.profile_steps, args.profile_dir)
+        print(f"profiler: tracing next {args.profile_steps} steps "
+              f"into {args.profile_dir}")
+
     if args.batch or slot:
         _run_batch(eng, args, cfg)
     else:
         _run_async(eng, args, cfg)
+
+    if args.metrics_json and not slot:
+        write_metrics_json(eng.obs.registry, args.metrics_json)
+        print(f"metrics snapshot: {args.metrics_json}")
 
     stats = getattr(eng, "prefix_stats", {})
     if stats:

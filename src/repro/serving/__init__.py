@@ -2,6 +2,9 @@ from repro.serving.api import (Request, RequestState, StepOutput,
                                UnsupportedCacheLayout)
 from repro.serving.core import EngineCore
 from repro.serving.engine import PagedServingEngine, ServingEngine
+from repro.serving.metrics import (Counter, Gauge, Histogram,
+                                   MetricsRegistry, start_metrics_server,
+                                   write_metrics_json)
 from repro.serving.paged import PagedKVCache
 from repro.serving.prefix_cache import PrefixHit, RadixPrefixCache
 from repro.serving.sampling import InvalidRequest, SamplingParams
@@ -10,10 +13,17 @@ from repro.serving.scheduler import (LanePlan, RaggedBatch, Scheduler,
 from repro.serving.server import (AsyncLMServer, ServerClosed,
                                   ServerOverloaded)
 from repro.serving.spec import NGramProposer
+from repro.serving.tracing import (RequestSpan, RequestTracer,
+                                   ServingObservability, SpanEvent,
+                                   StepTraceRing)
 
-__all__ = ["AsyncLMServer", "EngineCore", "InvalidRequest", "LanePlan",
-           "NGramProposer", "PagedKVCache", "PagedServingEngine",
-           "PrefixHit", "RadixPrefixCache", "RaggedBatch", "Request",
-           "RequestState", "SamplingParams", "Scheduler", "ServerClosed",
-           "ServerOverloaded", "ServingEngine", "StepOutput",
-           "UnsupportedCacheLayout", "default_token_buckets"]
+__all__ = ["AsyncLMServer", "Counter", "EngineCore", "Gauge", "Histogram",
+           "InvalidRequest", "LanePlan", "MetricsRegistry", "NGramProposer",
+           "PagedKVCache", "PagedServingEngine", "PrefixHit",
+           "RadixPrefixCache", "RaggedBatch", "Request", "RequestSpan",
+           "RequestState", "RequestTracer", "SamplingParams", "Scheduler",
+           "ServerClosed", "ServerOverloaded", "ServingEngine",
+           "ServingObservability", "SpanEvent", "StepOutput",
+           "StepTraceRing", "UnsupportedCacheLayout",
+           "default_token_buckets", "start_metrics_server",
+           "write_metrics_json"]

@@ -65,6 +65,7 @@ form for code that still threads its own key.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, List, Optional
 
 import jax
@@ -81,6 +82,7 @@ from repro.serving.sampling import (InvalidRequest, sample_row, stop_hit,
                                     validate_stop_tokens)
 from repro.serving.scheduler import Scheduler
 from repro.serving.spec import NGramProposer
+from repro.serving.tracing import ServingObservability
 
 
 def greedy_token(logits: jax.Array) -> int:
@@ -148,7 +150,8 @@ class EngineCore:
                  cache_pages: Optional[int] = None, seed: int = 0,
                  speculative: bool = False, spec_k: int = 4,
                  proposer: Any = None, kernel_config: Any = None,
-                 mesh: Any = None):
+                 mesh: Any = None, metrics: bool = True,
+                 registry: Any = None, trace_ring: int = 512):
         if mode not in ("ragged", "padded"):
             raise ValueError(f"unknown EngineCore mode {mode!r}; "
                              f"expected 'ragged' or 'padded'")
@@ -192,7 +195,14 @@ class EngineCore:
         self.params = params
         self.lanes = lanes
         self.max_len = max_len or num_pages * page_size
-        self.kv = PagedKVCache(self.model, num_pages, page_size)
+        # One observability bundle for the whole stack (serving/tracing.py):
+        # registry + request spans + step ring + the retrace sentinel.  All
+        # hooks are host-side no-ops when ``metrics=False`` (the bench's
+        # overhead A/B arm); ``registry=`` lets several engines share one.
+        self.obs = ServingObservability(enabled=metrics, registry=registry,
+                                        ring_capacity=trace_ring)
+        self.kv = PagedKVCache(self.model, num_pages, page_size,
+                               obs=self.obs)
         self._pool_specs = None
         if self.mesh is not None:
             # Shard the pool's KV-head axis; page ids stay whole on every
@@ -210,7 +220,8 @@ class EngineCore:
         # prefix; chunked prefill then starts at the first cold token.
         # Token streams are identical with the cache on or off (the prefix
         # pages hold the exact KV the skipped chunks would have written).
-        self.prefix_cache = (RadixPrefixCache(self.kv, max_pages=cache_pages)
+        self.prefix_cache = (RadixPrefixCache(self.kv, max_pages=cache_pages,
+                                              obs=self.obs)
                              if prefix_cache else None)
         # Speculative decoding (opt-in): a host-side proposer drafts up to
         # spec_k tokens per greedy decode lane; the scheduler streams the
@@ -222,14 +233,16 @@ class EngineCore:
         self.speculative = speculative
         self.spec_k = spec_k if speculative else 0
         self.proposer = (proposer if proposer is not None
-                         else NGramProposer()) if speculative else None
+                         else NGramProposer(obs=self.obs)) \
+            if speculative else None
         self.scheduler = Scheduler(self.kv, lanes=lanes,
                                    chunk_size=chunk_size,
                                    step_tokens=step_tokens,
                                    token_buckets=token_buckets,
                                    prefix_cache=self.prefix_cache,
                                    spec_k=self.spec_k,
-                                   proposer=self.proposer)
+                                   proposer=self.proposer,
+                                   obs=self.obs)
         # Varlen-kernel block shapes: explicit override, else the
         # autotuner's persisted per-(model, platform) table, else the
         # hardcoded default.  Static for the engine's lifetime — the jitted
@@ -250,6 +263,7 @@ class EngineCore:
 
         def step_fn(params, pool, tbl, toks, kv_len, q_len):
             self.trace_count += 1       # python side effect: counts traces
+            self.obs.step_traced()      # retrace sentinel (tracing.py)
             return m.prefill_chunk_paged(params, toks, pool, tbl,
                                          kv_len, q_len)
 
@@ -259,6 +273,7 @@ class EngineCore:
         def ragged_fn(params, pool, token_pages, toks, pos, last_idx, cu,
                       temperature, top_k, top_p, seed, counter):
             self.trace_count += 1       # python side effect: counts traces
+            self.obs.step_traced()      # retrace sentinel (tracing.py)
             # The five (lanes,) sampling arrays are traced data — a new
             # temperature/seed can never be a retrace key — and the step
             # returns tokens, not logits: selection happens in-graph.
@@ -290,6 +305,8 @@ class EngineCore:
         self._step = jax.jit(step_fn, donate_argnums=(1,))
         self._ragged = (None if self.model.step_ragged is None
                         else jax.jit(ragged_fn, donate_argnums=(1,)))
+        self.obs.g_mesh.set(self.mesh_size)
+        self.obs.g_coll_per_tok.set(self.collective_bytes_per_token)
 
     @staticmethod
     def _resolve_mesh(mesh):
@@ -350,9 +367,18 @@ class EngineCore:
         chunked prefill, decode, admission, preemption — happen here; the
         engine's ``mode`` picks the packing (ragged stream / padded block),
         the token streams are identical either way."""
-        if self.mode == "ragged":
-            return self._step_ragged()
-        return self._step_padded()
+        t0 = time.perf_counter()
+        out = (self._step_ragged() if self.mode == "ragged"
+               else self._step_padded())
+        s = self.scheduler
+        self.obs.record_step(
+            out, dur_ms=(time.perf_counter() - t0) * 1e3,
+            sched=s, kv=self.kv, cache=self.prefix_cache,
+            table_pages=s._table_pages,
+            trimmed_prefill=s.trimmed_prefill_step,
+            trimmed_drafts=s.trimmed_draft_step,
+            width=out.padded_rows)
+        return out
 
     def _step_padded(self) -> StepOutput:
         """The PR-3 right-aligned (lanes, C) block step (oracle mode)."""
@@ -557,8 +583,10 @@ class EngineCore:
                 else:
                     out_tokens.pop(req.uid, None)
                 run.rows = min(run.rows, run.known())
+            self.obs.tokens_committed(req.uid, n, first=(start == 0))
             if p.drafts:
                 accepted += n - 1
+                self.obs.spec_verify(req.uid, len(p.drafts), n - 1)
                 run.pages = self.kv.uncommit(run.pages, run.rows)
             if done:
                 req.done = True
@@ -607,13 +635,71 @@ class EngineCore:
         token-row streamed: one tiled head all-gather per attention layer,
         ``Hq · Dh · itemsize · (N−1)/N`` each.  Analytic (the dataflow has
         exactly this one collective), so the bench can report collective
-        traffic without instrumenting the compiled step; 0 off-mesh."""
+        traffic without instrumenting the compiled step; 0 off-mesh.
+
+        The gathered tensor is the *pre-projection attention output* — a
+        float32 activation (the varlen kernel accumulates in f32 and the
+        residual stream runs f32 over the narrow params), not a
+        ``cfg.dtype`` value.  Pricing it at ``cfg.dtype`` was a silent 2×
+        undercount on bf16 models, caught by the measured-HLO cross-check
+        (:meth:`measure_collective_bytes`); casting the gather operand
+        down to ``cfg.dtype`` would halve the real wire traffic but
+        change sharded-vs-single-device numerics — an open ROADMAP item,
+        not a bookkeeping choice."""
         n = self.mesh_size
         if n == 1:
             return 0
         per_layer = (self.cfg.num_heads * self.cfg.d_head
-                     * jnp.dtype(self.cfg.dtype).itemsize)
+                     * jnp.dtype(jnp.float32).itemsize)
         return self.cfg.num_layers * per_layer * (n - 1) // n
+
+    def measure_collective_bytes(self, width: Optional[int] = None) -> int:
+        """*Measured* per-device collective wire bytes for one compiled
+        ragged step, by walking the step's optimized HLO with
+        :func:`repro.launch.hlo_analysis.hlo_totals` — the cross-check for
+        the analytic :attr:`collective_bytes_per_token` (measured ≈
+        analytic × stream width: every packed row, live or dead, runs the
+        per-layer head all-gather).
+
+        AOT: lowers and compiles the step at ``width`` (default: the
+        widest token bucket) and the current table-width high-water mark
+        without executing anything — but compiling *is* tracing, so call
+        this before ``obs.mark_warm()`` or the sentinel counts it as a
+        retrace.  Publishes the ``collective_bytes_per_step`` gauge;
+        returns 0 off-mesh.
+        """
+        if self.mesh is None or self._ragged is None:
+            self.obs.g_coll_per_step.set(0)
+            return 0
+        from repro.launch.hlo_analysis import hlo_totals
+        t = int(width or self.scheduler.token_buckets[-1])
+        pw = self.scheduler._table_pages
+        lanes = self.lanes
+        cu = np.full((lanes + 2,), t, np.int32)
+        cu[0] = 0
+        last_idx = (jnp.zeros((lanes, self.spec_k + 1), jnp.int32)
+                    if self.speculative else jnp.zeros((lanes,), jnp.int32))
+        args = (self.params, self.kv.pool,
+                jnp.full((t, pw), self.kv.scratch, jnp.int32),
+                jnp.zeros((t,), jnp.int32), jnp.zeros((t,), jnp.int32),
+                last_idx, jnp.asarray(cu),
+                jnp.zeros((lanes,), jnp.float32),
+                jnp.zeros((lanes,), jnp.int32),
+                jnp.ones((lanes,), jnp.float32),
+                jnp.zeros((lanes,), jnp.uint32),
+                jnp.zeros((lanes,), jnp.int32))
+        try:
+            # The trunk is a lax.scan over layer periods — one while loop
+            # at depth 0 whose body must be multiplied by the trip count.
+            from repro.models.lm import period_layout
+            _, nper, _ = period_layout(self.cfg)
+            hints = [int(nper)]
+        except Exception:
+            hints = None
+        hlo = self._ragged.lower(*args).compile().as_text()
+        total = int(hlo_totals(hlo, trip_hints=hints)["total_wire_bytes"])
+        self.obs.g_coll_per_step.set(total)
+        return total
 
     @property
     def prefix_stats(self) -> dict:

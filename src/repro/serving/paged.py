@@ -137,10 +137,12 @@ def _check_pageable(model, page_size: int) -> Pytree:
 class PagedKVCache:
     """Page pool + free list over a model's cache pytree (see module doc)."""
 
-    def __init__(self, model, num_pages: int, page_size: int):
+    def __init__(self, model, num_pages: int, page_size: int, *, obs=None):
         self.model = model
         self.num_pages = num_pages
         self.page_size = page_size
+        self.obs = obs                              # ServingObservability
+
         self.scratch = num_pages                    # sink page for idle rows
         # Length axis per leaf, discovered by growing max_len: paging is only
         # sound if every leaf scales with it (k/v rows, quant scales, …).
@@ -261,6 +263,8 @@ class PagedKVCache:
         self.pool = self._copy_fn(self.pool, jnp.int32(page), jnp.int32(fresh))
         self.release_one(page)
         self.cow_copies += 1
+        if self.obs is not None:
+            self.obs.cow_copy()
         return fresh
 
     # ------------------------------------------------------------- pool ops

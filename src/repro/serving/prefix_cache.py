@@ -94,10 +94,11 @@ class RadixPrefixCache:
     """Radix tree of page-aligned token blocks → resident pool pages."""
 
     def __init__(self, kv: PagedKVCache,
-                 max_pages: Optional[int] = None):
+                 max_pages: Optional[int] = None, *, obs=None):
         if max_pages is not None and max_pages < 1:
             raise ValueError(f"max_pages must be >= 1, got {max_pages}")
         self.kv = kv
+        self.obs = obs                          # ServingObservability
         self.page_size = kv.page_size
         self.max_pages = max_pages
         self.root = _Node((), -1, None, 0)      # type: ignore[arg-type]
@@ -197,6 +198,8 @@ class RadixPrefixCache:
         (``total_tokens`` = the request's known tokens, hit or not)."""
         self.lookups += 1
         self.lookup_tokens += total_tokens
+        if self.obs is not None:
+            self.obs.prefix_lookup(total_tokens, hit.tokens, len(hit.pages))
         if not hit.tokens:
             return
         stamp = next(self._clock)
@@ -271,6 +274,8 @@ class RadixPrefixCache:
         del self._nodes[node.page]
         self.evicted_pages += 1
         self.version += 1
+        if self.obs is not None:
+            self.obs.prefix_evicted()
 
     def enforce_budget(self) -> None:
         """Shrink to ``max_pages`` resident cached pages (LRU leaf-first);

@@ -188,10 +188,14 @@ class Scheduler:
                  step_tokens: Optional[int] = None,
                  token_buckets: Optional[Sequence[int]] = None,
                  prefix_cache: Optional[RadixPrefixCache] = None,
-                 spec_k: int = 0, proposer=None):
+                 spec_k: int = 0, proposer=None, obs=None):
         assert chunk_size >= 1
         self.kv = kv
         self.cache = prefix_cache
+        if obs is None:
+            from .tracing import ServingObservability
+            obs = ServingObservability(enabled=False)
+        self.obs = obs
         self.lanes = lanes
         self.chunk_size = chunk_size
         # Speculative decoding (opt-in): with spec_k > 0 and a proposer
@@ -223,6 +227,8 @@ class Scheduler:
         self.preempted_count = 0                    # evictions, lifetime
         self._evicted_now: List[int] = []           # within one schedule()
         self.prefix_hit_tokens_step = 0             # granted this schedule()
+        self.trimmed_prefill_step = 0               # tokens, this schedule()
+        self.trimmed_draft_step = 0                 # tokens, this schedule()
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, req: Request) -> None:
@@ -240,6 +246,8 @@ class Scheduler:
         req.state = RequestState.WAITING
         self.waiting.append(RunningRequest(req, self._ticket))
         self._ticket += 1
+        self.obs.request_submitted(req.uid, prompt_len=len(req.prompt),
+                                   max_new=req.max_new)
 
     def finish(self, run: RunningRequest) -> None:
         """Release a completed request's lane and pages, publishing its full
@@ -250,6 +258,8 @@ class Scheduler:
         self.kv.release(run.pages)
         run.pages = []
         run.req.state = RequestState.FINISHED
+        self.obs.request_finished(run.req.uid,
+                                  generated=len(run.req.tokens))
         if self.cache is not None:
             self.cache.enforce_budget()
 
@@ -267,6 +277,8 @@ class Scheduler:
                 self.waiting.remove(run)
                 run.req.done = True
                 run.req.state = RequestState.ABORTED
+                self.obs.request_finished(uid, aborted=True,
+                                          generated=len(run.req.tokens))
                 return True
         for run in self.running:
             if run.req.uid == uid:
@@ -282,6 +294,8 @@ class Scheduler:
                 run.pages = []
                 run.req.done = True
                 run.req.state = RequestState.ABORTED
+                self.obs.request_finished(uid, aborted=True,
+                                          generated=len(run.req.tokens))
                 if self.cache is not None:
                     self.cache.enforce_budget()
                 return True
@@ -328,6 +342,7 @@ class Scheduler:
         victim.req.state = RequestState.PREEMPTED
         self.preempted_count += 1
         self._evicted_now.append(victim.req.uid)
+        self.obs.request_preempted(victim.req.uid)
         bisect.insort(self.waiting, victim, key=lambda r: r.ticket)
         if self.cache is not None:
             self.cache.enforce_budget()
@@ -377,7 +392,10 @@ class Scheduler:
         # reclaimable pool before the next copy draws on it, so the
         # aggregate budget above is also sequentially safe
         for i in sorted(cow, key=lambda i: not self._cow_credit(run.pages[i])):
-            run.pages[i] = self.kv.cow(run.pages[i])
+            old = run.pages[i]
+            run.pages[i] = self.kv.cow(old)
+            if run.pages[i] != old:
+                self.obs.request_cow(run.req.uid)
         for _ in range(need):
             run.pages.append(self.kv.alloc())
         return True
@@ -410,6 +428,7 @@ class Scheduler:
             if need > avail:
                 break                     # FCFS: the head blocks the queue
             self.waiting.pop(0)
+            resumed = cand.req.state is RequestState.PREEMPTED
             if hit is not None:
                 self.cache.grant(hit, cand.known())
                 cand.pages = list(hit.pages)
@@ -418,6 +437,10 @@ class Scheduler:
             else:
                 cand.rows = 0
             cand.req.state = RequestState.PREFILL
+            self.obs.request_admitted(
+                cand.req.uid,
+                hit_tokens=hit.tokens if hit is not None else 0,
+                resumed=resumed)
             bisect.insort(self.running, cand, key=lambda r: r.ticket)
 
     # ---------------------------------------------------------------- plan
@@ -506,6 +529,7 @@ class Scheduler:
                 drafts = drafts[:-1]                  # degrade, don't evict
                 q -= 1
             if len(drafts) != len(orig):
+                self.trimmed_draft_step += len(orig) - len(drafts)
                 if drafts:
                     self._drafts[run.ticket] = drafts
                 else:
@@ -528,6 +552,8 @@ class Scheduler:
         only ``mode="padded"`` — the oracle — takes the plans path now.)"""
         self._evicted_now = []
         self.prefix_hit_tokens_step = 0
+        self.trimmed_prefill_step = 0
+        self.trimmed_draft_step = 0
         self._drafts = {}
         self._admit()
         return self._plan_wants()
@@ -591,6 +617,7 @@ class Scheduler:
                 del self._drafts[tkt]
             wants[tkt] -= take
             cut -= take
+            self.trimmed_draft_step += take
         for tkt in sorted(wants, reverse=True):       # prefill: youngest 1st
             if cut == 0:
                 break
@@ -599,6 +626,7 @@ class Scheduler:
             take = min(cut, wants[tkt] - 1)
             wants[tkt] -= take
             cut -= take
+            self.trimmed_prefill_step += take
         return wants
 
     def pack(self, plans: List[LanePlan]) -> RaggedBatch:

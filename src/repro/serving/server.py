@@ -39,19 +39,21 @@ This module is that process, as one serve loop and one async generator:
   work finish; ``drain=False`` aborts every in-flight client first.  The
   async context manager form does a draining shutdown on exit.
 
-Latency telemetry (TTFT / TPOT / sustained req/s) is recorded per request
-and aggregated by :meth:`AsyncLMServer.summary` — the nightly serve-loop
-bench reads it directly.
+Latency telemetry (TTFT / TPOT / sustained req/s) flows into the engine's
+metrics registry (``serving/tracing.py``); :meth:`AsyncLMServer.summary`
+is a thin window over it — the nightly serve-loop bench, the ``/metrics``
+exposition and ``--metrics-json`` all read the same counters.
 """
 from __future__ import annotations
 
 import asyncio
 import dataclasses
 import time
-from typing import AsyncIterator, Dict, List, Optional, Set
+from typing import AsyncIterator, Dict, Optional, Set
 
 from repro.serving.api import Request
 from repro.serving.sampling import stop_holdback
+from repro.serving.tracing import ServingObservability
 
 _DONE = object()          # end-of-stream sentinel on a client's queue
 
@@ -112,7 +114,15 @@ class AsyncLMServer:
         self._closing = False
         self.steps = 0
         self.cancelled = 0
-        self.records: List[dict] = []   # finished-request latency telemetry
+        # The engine's observability bundle is the telemetry home; an
+        # engine serving with metrics off gets a private (enabled) one so
+        # summary() keeps working either way.
+        obs = getattr(engine, "obs", None)
+        self.obs = (obs if obs is not None and obs.enabled
+                    else ServingObservability())
+        self._window: Optional[dict] = None     # registry anchor at start()
+        self._span_t0: Optional[float] = None   # earliest finished submit
+        self._span_t1: Optional[float] = None   # latest finish
 
     # ------------------------------------------------------------ lifecycle
     async def start(self) -> "AsyncLMServer":
@@ -120,6 +130,7 @@ class AsyncLMServer:
             raise RuntimeError("server already started")
         self._intake = asyncio.Queue(maxsize=self.max_waiting)
         self._wake = asyncio.Event()
+        self._window = self.obs.server_window()
         self._task = asyncio.create_task(self._serve(), name="lm-serve-loop")
         return self
 
@@ -207,6 +218,7 @@ class AsyncLMServer:
             client = self._clients.pop(uid, None)
             if client is not None:
                 self.cancelled += 1
+                self.obs.stream_cancelled()
                 client.queue.put_nowait(_DONE)
 
     def _flush(self) -> None:
@@ -227,10 +239,15 @@ class AsyncLMServer:
                 client.queue.put_nowait(req.tokens[client.emitted])
                 client.emitted += 1
             if req.done:
-                self.records.append({
-                    "uid": uid, "submitted": client.submitted_t,
-                    "first": client.first_t, "finished": now,
-                    "tokens": client.emitted})
+                if client.first_t is not None:
+                    self._span_t0 = (client.submitted_t
+                                     if self._span_t0 is None
+                                     else min(self._span_t0,
+                                              client.submitted_t))
+                    self._span_t1 = (now if self._span_t1 is None
+                                     else max(self._span_t1, now))
+                self.obs.stream_finished(client.submitted_t, client.first_t,
+                                         now, client.emitted)
                 client.queue.put_nowait(_DONE)
                 del self._clients[uid]
 
@@ -263,29 +280,11 @@ class AsyncLMServer:
 
     # ------------------------------------------------------------ telemetry
     def summary(self) -> dict:
-        """Latency aggregate over finished requests: sustained req/s over
-        the serving span, TTFT p50/p99 (submit → first streamed token) and
-        TPOT (mean inter-token time after the first)."""
-        recs = [r for r in self.records if r["first"] is not None]
-        if not recs:
-            return {"requests": 0, "cancelled": self.cancelled,
-                    "steps": self.steps}
-        ttft = sorted((r["first"] - r["submitted"]) * 1e3 for r in recs)
-        tpot = [(r["finished"] - r["first"]) / (r["tokens"] - 1) * 1e3
-                for r in recs if r["tokens"] > 1]
-        span = (max(r["finished"] for r in recs)
-                - min(r["submitted"] for r in recs))
-
-        def pct(xs, q):
-            return xs[min(len(xs) - 1, int(q * len(xs)))]
-
-        return {
-            "requests": len(recs),
-            "cancelled": self.cancelled,
-            "steps": self.steps,
-            "req_s": len(recs) / span if span > 0 else float("inf"),
-            "ttft_ms_p50": pct(ttft, 0.50),
-            "ttft_ms_p99": pct(ttft, 0.99),
-            "tpot_ms": sum(tpot) / len(tpot) if tpot else 0.0,
-            "tokens": sum(r["tokens"] for r in recs),
-        }
+        """Latency aggregate over this server instance's finished requests
+        — a thin window over the metrics registry (sustained req/s over
+        the serving span, TTFT p50/p99 submit → first streamed token, TPOT
+        mean inter-token time after the first).  The same counters feed
+        ``/metrics`` and ``--metrics-json``; nothing is recomputed here."""
+        return self.obs.server_summary(
+            self._window, steps=self.steps, cancelled=self.cancelled,
+            span=(self._span_t0, self._span_t1))

@@ -72,11 +72,12 @@ class NGramProposer:
     """
 
     def __init__(self, max_ngram: int = 3, min_ngram: int = 1,
-                 history: int = 0):
+                 history: int = 0, obs=None):
         assert max_ngram >= min_ngram >= 1
         self.max_ngram = max_ngram
         self.min_ngram = min_ngram
         self.history = history
+        self.obs = obs                      # ServingObservability
         # insertion-ordered ring of finished streams, newest last
         self._streams: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.proposals = 0                  # telemetry: non-empty proposals
@@ -113,6 +114,8 @@ class NGramProposer:
                 out = [int(t) for t in out]
                 self.proposals += 1
                 self.proposed_tokens += len(out)
+                if self.obs is not None:
+                    self.obs.spec_proposed(len(out))
                 return out
         return []
 

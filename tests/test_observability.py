@@ -1,0 +1,469 @@
+"""Unified serving observability: registry, spans, retrace sentinel.
+
+The contracts under test (PR 10):
+
+- **registry semantics** — counters/gauges/histograms with labeled
+  families, snapshot/delta/ratio windows, count-offset histogram
+  percentiles, kind conflicts rejected;
+- **exporters** — Prometheus text exposition (cumulative buckets,
+  ``_sum``/``_count``), JSON snapshot round-trip, and the asyncio
+  ``/metrics`` endpoint serving both off an ephemeral port;
+- **engine integration** — one served pass populates the registry with
+  exactly the engine's own accounting (steps, tokens, traces, TTFT
+  observations), the step ring records scheduler decisions, and a
+  metrics-off engine emits identical tokens while writing nothing;
+- **span lifecycle** — every request path (finish, abort mid-prefill,
+  preempt-and-resume, speculative reject, server-side cancel) leaves one
+  complete, ordered, *closed* span and no open-span leaks;
+- **retrace sentinel** — after ``mark_warm()`` a warm engine serves
+  fresh traffic with ``step_retraces_total == 0``, and the sentinel
+  *fails* (counts retraces) if the scheduler's table-width high-water
+  mark — the PR 8 shape-stability fix — is reverted.
+"""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving import (AsyncLMServer, EngineCore, Histogram,
+                           MetricsRegistry, Request, RequestTracer,
+                           Scheduler, StepTraceRing, start_metrics_server,
+                           write_metrics_json)
+from tests.test_engine_core import build, by_uid, prompts_for
+
+
+# ------------------------------------------------------------- registry --
+
+def test_counter_gauge_histogram_basics():
+    r = MetricsRegistry()
+    c = r.counter("reqs_total", "requests")
+    c.inc()
+    c.inc(4)
+    assert c.value() == 5
+    c.inc(2, packing="ragged")
+    assert c.value(packing="ragged") == 2
+    assert c.value() == 5                       # unlabeled series untouched
+
+    g = r.gauge("pool_pages")
+    g.set(7)
+    g.set_max(3)                                # lower: no-op
+    assert g.value() == 7
+    g.set_max(11)
+    assert g.value() == 11
+
+    h = r.histogram("lat_ms")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert h.count() == 4 and h.sum() == 10.0
+    assert h.mean() == 2.5
+    assert h.percentile(0.0) == 1.0
+    assert h.percentile(1.0) == 4.0
+    # count-offset window: skip the first two lifetime observations
+    assert h.mean(skip=2) == 3.5
+    assert h.percentile(0.0, skip=2) == 3.0
+
+    assert r.value("reqs_total") == 5
+    assert r.value("lat_ms") == 4               # histograms report count
+    assert r.value("missing") == 0
+
+
+def test_registry_get_or_create_and_kind_conflict():
+    r = MetricsRegistry()
+    assert r.counter("x") is r.counter("x")
+    with pytest.raises(TypeError):
+        r.gauge("x")
+    assert r.names() == ["x"]
+
+
+def test_snapshot_delta_ratio_windows():
+    r = MetricsRegistry()
+    hit, known = r.counter("hit"), r.counter("known")
+    hit.inc(90)
+    known.inc(100)
+    snap = r.snapshot()
+    hit.inc(5)
+    known.inc(10)
+    d = r.delta(snap)
+    assert d["hit"] == 5 and d["known"] == 10
+    assert r.ratio("hit", "known", since=snap) == 0.5
+    assert r.ratio("hit", "known") == 95 / 110          # lifetime
+    assert r.ratio("hit", "absent") == 0.0              # den 0 -> 0
+
+
+def test_histogram_window_survives_reservoir_eviction():
+    h = Histogram("h", max_samples=4)
+    for v in range(10):                     # samples 0..5 fell off the deque
+        h.observe(float(v))
+    assert h.count() == 10
+    # a skip older than the retained window degrades to "all retained"
+    assert h.mean(skip=2) == np.mean([6.0, 7.0, 8.0, 9.0])
+    assert h.mean(skip=8) == np.mean([8.0, 9.0])
+
+
+# ------------------------------------------------------------ exporters --
+
+def test_prometheus_text_exposition():
+    r = MetricsRegistry()
+    r.counter("a_total", "things").inc(3)
+    r.gauge("b").set(1.5)
+    h = r.histogram("lat_ms", "latency")
+    h.observe(0.5)
+    h.observe(30.0)
+    text = r.prometheus_text()
+    assert "# HELP a_total things" in text
+    assert "# TYPE a_total counter" in text
+    assert "a_total 3" in text
+    assert "b 1.5" in text
+    assert "# TYPE lat_ms histogram" in text
+    assert 'lat_ms_bucket{le="1.0"} 1' in text          # cumulative
+    assert 'lat_ms_bucket{le="50.0"} 2' in text
+    assert 'lat_ms_bucket{le="+Inf"} 2' in text
+    assert "lat_ms_sum 30.5" in text
+    assert "lat_ms_count 2" in text
+
+
+def test_json_snapshot_roundtrip(tmp_path):
+    r = MetricsRegistry()
+    r.counter("a_total").inc(3)
+    r.histogram("lat_ms").observe(2.0)
+    assert json.loads(r.json_text()) == json.loads(
+        json.dumps(r.snapshot()))
+    path = tmp_path / "metrics.json"
+    write_metrics_json(r, str(path))
+    got = json.loads(path.read_text())
+    assert got["a_total"]["series"][""] == 3
+    assert got["lat_ms"]["count"] == 1
+
+
+def test_http_metrics_endpoint():
+    r = MetricsRegistry()
+    r.counter("scraped_total").inc(42)
+
+    async def fetch(port, path):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        writer.write(f"GET {path} HTTP/1.0\r\n\r\n".encode())
+        await writer.drain()
+        data = await reader.read()
+        writer.close()
+        head, _, body = data.partition(b"\r\n\r\n")
+        return head.decode(), body.decode()
+
+    async def main():
+        server = await start_metrics_server(r, port=0)
+        port = server.sockets[0].getsockname()[1]
+        try:
+            prom = await fetch(port, "/metrics")
+            js = await fetch(port, "/metrics.json")
+            missing = await fetch(port, "/nope")
+        finally:
+            server.close()
+            await server.wait_closed()
+        return prom, js, missing
+
+    prom, js, missing = asyncio.run(main())
+    assert "200 OK" in prom[0] and "scraped_total 42" in prom[1]
+    assert "200 OK" in js[0]
+    assert json.loads(js[1])["scraped_total"]["series"][""] == 42
+    assert "404" in missing[0]
+
+
+# ---------------------------------------------------------------- spans --
+
+def test_tracer_span_lifecycle():
+    t = [0.0]
+    tracer = RequestTracer(clock=lambda: t[0])
+    tracer.begin(1, prompt_len=8)
+    t[0] = 1.0
+    tracer.event(1, "admitted")
+    tracer.event(99, "admitted")               # unknown uid: no-op, no leak
+    t[0] = 3.0
+    span = tracer.end(1, "finished", generated=5)
+    assert span.status == "finished" and not span.open
+    assert span.event_names() == ["submitted", "admitted", "finished"]
+    assert span.first("submitted").attrs == {"prompt_len": 8}
+    assert span.duration_ms() == 3000.0
+    assert tracer.open_spans() == {}
+    assert tracer.span(1) is span              # closed spans stay findable
+
+    # uid reuse while a span is still open orphans the stale one
+    tracer.begin(2)
+    tracer.begin(2)
+    assert len([s for s in tracer.finished if s.status == "orphaned"]) == 1
+    assert tracer.span(2).open
+
+
+def test_step_trace_ring_is_bounded():
+    ring = StepTraceRing(capacity=3)
+    for i in range(5):
+        ring.append({"step": i})
+    assert len(ring) == 3
+    assert [r["step"] for r in ring.records()] == [2, 3, 4]
+    assert ring.last() == {"step": 4}
+
+
+# ----------------------------------------------------- engine integration --
+
+def _drain(eng):
+    steps = 0
+    while eng.scheduler.has_work():
+        eng.step()
+        steps += 1
+        assert steps < 2000
+    return steps
+
+
+def test_engine_populates_registry_and_spans():
+    """One served pass: every registry family reflects the engine's own
+    accounting, each request leaves a complete closed span, and the step
+    ring recorded every scheduling decision."""
+    cfg, params = build()
+    eng = EngineCore(cfg, params, lanes=3, page_size=8, num_pages=24,
+                     chunk_size=8, mode="ragged")
+    n = 4
+    reqs = [Request(uid=i, prompt=p, max_new=5)
+            for i, p in enumerate(prompts_for(cfg, 3, (3, 9, 14, 6)))]
+    for r in reqs:
+        eng.submit(r)
+    steps = _drain(eng)
+
+    reg = eng.obs.registry
+    assert reg.value("steps_total") == steps
+    assert reg.value("requests_submitted_total") == n
+    assert reg.value("requests_admitted_total") == n
+    assert reg.value("requests_finished_total") == n
+    assert reg.value("tokens_generated_total") == sum(
+        len(r.tokens) for r in reqs)
+    assert reg.value("step_traces_total") == eng.trace_count
+    assert reg.value("step_retraces_total") == 0       # never marked warm
+    assert eng.obs.h_ttft_ms.count() == n              # one TTFT each
+    assert eng.obs.h_step_ms.count() == steps
+    assert reg.value("pool_pages_in_use") == 0         # drained
+    assert reg.value("pool_pages_in_use_peak") > 0
+
+    assert eng.obs.tracer.open_spans() == {}           # no leaks
+    for r in reqs:
+        span = eng.obs.tracer.span(r.uid)
+        assert span.status == "finished"
+        names = span.event_names()
+        assert names[0] == "submitted" and names[-1] == "finished"
+        assert names.index("admitted") < names.index("first_token")
+
+    assert len(eng.obs.ring) == steps
+    rec = eng.obs.ring.last()
+    for key in ("width", "table_pages", "live_rows", "padded_rows",
+                "prefill_tokens", "decode_tokens", "pool_pages_in_use",
+                "dur_ms"):
+        assert key in rec
+
+
+def test_metrics_off_engine_is_inert_and_token_identical():
+    cfg, params = build()
+    kw = dict(lanes=3, page_size=8, num_pages=24, chunk_size=8,
+              mode="ragged")
+    def reqs():
+        return [Request(uid=i, prompt=p, max_new=5) for i, p in
+                enumerate(prompts_for(cfg, 3, (3, 9, 14, 6)))]
+
+    on = EngineCore(cfg, params, **kw)
+    off = EngineCore(cfg, params, metrics=False, **kw)
+    ra, rb = reqs(), reqs()
+    for a, b in zip(ra, rb):
+        on.submit(a)
+        off.submit(b)
+    _drain(on)
+    _drain(off)
+    assert by_uid(ra) == by_uid(rb)
+    assert not off.obs.enabled
+    assert off.obs.registry.value("steps_total") == 0
+    assert len(off.obs.ring) == 0
+    assert off.obs.tracer.open_spans() == {}
+    assert on.obs.registry.value("steps_total") > 0
+
+
+# -------------------------------------------------------- span lifecycle --
+
+def test_abort_mid_prefill_closes_span():
+    """Aborting a request whose prompt is still streaming chunks ends its
+    span as 'aborted' with no first_token and leaks nothing."""
+    cfg, params = build()
+    eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=32,
+                     chunk_size=4, mode="ragged")
+    prompt = prompts_for(cfg, 5, (24,))[0]     # 6 chunks of 4
+    eng.submit(Request(uid=0, prompt=prompt, max_new=8))
+    eng.step()                                 # first prefill chunk only
+    assert eng.abort(0)
+    span = eng.obs.tracer.span(0)
+    assert span.status == "aborted"
+    assert span.event_names() == ["submitted", "admitted", "aborted"]
+    assert eng.obs.tracer.open_spans() == {}
+    assert eng.obs.registry.value("requests_aborted_total") == 1
+    assert eng.obs.registry.value("requests_finished_total") == 0
+    assert eng.pages_in_use == 0
+
+
+def test_preempt_and_resume_events_in_span():
+    """Pool contention: the evicted request's span records preempted then
+    resumed, and still closes as finished."""
+    cfg, params = build()
+    specs = [(4, 26), (12, 14)]                # contended at 8 pages
+    prompts = prompts_for(cfg, 21, [lp for lp, _ in specs])
+    eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=8,
+                     chunk_size=4, mode="ragged")
+    for uid, (lp, mn) in enumerate(specs):
+        eng.submit(Request(uid=uid, prompt=prompts[uid], max_new=mn))
+    _drain(eng)
+    assert eng.obs.registry.value("preemptions_total") >= 1
+    assert eng.obs.registry.value("requests_resumed_total") >= 1
+    preempted = [uid for uid in (0, 1)
+                 if "preempted" in eng.obs.tracer.span(uid).event_names()]
+    assert preempted, "pool contention never evicted anyone"
+    for uid in preempted:
+        span = eng.obs.tracer.span(uid)
+        names = span.event_names()
+        assert span.status == "finished"
+        assert names.index("preempted") < names.index("resumed")
+    assert eng.obs.tracer.open_spans() == {}
+
+
+def test_speculative_rejection_recorded_in_span():
+    """An always-wrong proposer: every drafted token is verified and
+    rejected — spans carry spec_verify events with accepted == 0 and the
+    registry's acceptance window is 0."""
+    cfg, params = build()
+
+    def off_by_one(stream, k):                 # wrong draft every time
+        return [int(stream[-1] + 1) % cfg.vocab_size] * k
+
+    eng = EngineCore(cfg, params, lanes=2, page_size=8, num_pages=24,
+                     chunk_size=8, mode="ragged", speculative=True,
+                     spec_k=3, proposer=off_by_one)
+    for i, p in enumerate(prompts_for(cfg, 11, (6, 9))):
+        eng.submit(Request(uid=i, prompt=p, max_new=6))
+    _drain(eng)
+    reg = eng.obs.registry
+    assert reg.value("spec_drafted_tokens_total") > 0
+    assert reg.value("spec_accepted_tokens_total") == 0
+    verifies = [e for uid in (0, 1)
+                for e in eng.obs.tracer.span(uid).events
+                if e.name == "spec_verify"]
+    assert verifies
+    assert all(e.attrs["accepted"] == 0 for e in verifies)
+    assert all(e.attrs["drafted"] > 0 for e in verifies)
+
+
+def test_server_cancel_closes_span_and_counts_stream():
+    """A client breaking out of its stream aborts the request: the span
+    closes as 'aborted', the stream-cancel counter bumps, and survivors'
+    spans finish normally."""
+    cfg, params = build()
+    eng = EngineCore(cfg, params, lanes=2, page_size=4, num_pages=32,
+                     chunk_size=8, mode="ragged")
+    reqs = [Request(uid=i, prompt=p, max_new=8)
+            for i, p in enumerate(prompts_for(cfg, 9, (5, 7)))]
+
+    async def consume(server, req, cancel_after=None):
+        toks = []
+        async for tok in server.generate(req):
+            toks.append(tok)
+            if cancel_after is not None and len(toks) >= cancel_after:
+                break
+        return toks
+
+    async def main():
+        async with AsyncLMServer(eng) as server:
+            return await asyncio.gather(
+                consume(server, reqs[0], cancel_after=2),
+                consume(server, reqs[1]))
+
+    outs = asyncio.run(main())
+    assert len(outs[0]) == 2 and len(outs[1]) == 8
+    reg = eng.obs.registry
+    assert reg.value("stream_cancelled_total") == 1
+    assert reg.value("stream_requests_total") == 1      # finished streams
+    assert reg.value("requests_aborted_total") == 1
+    assert eng.obs.tracer.span(0).status == "aborted"
+    assert eng.obs.tracer.span(1).status == "finished"
+    assert eng.obs.tracer.open_spans() == {}
+
+
+# ------------------------------------------------------ retrace sentinel --
+
+_BUCKETS = (1, 2, 4, 8, 16)        # pow2-only: solo(3) and 3+1 both -> 4
+
+
+def _sentinel_engine(cfg, params):
+    return EngineCore(cfg, params, lanes=2, page_size=4, num_pages=24,
+                      chunk_size=8, max_len=64, mode="ragged",
+                      token_buckets=_BUCKETS)
+
+
+def _sentinel_warm_pass(eng, cfg, uid0):
+    """One warm-up pass: a long request grows its page table past the
+    16-page bucket, then two short requests co-batch with its decode (so
+    their shapes are traced AT the high-water table width), and the long
+    drains last (covering the solo widths at that width too)."""
+    long_p, = prompts_for(cfg, 17, (16,))
+    eng.submit(Request(uid=uid0, prompt=long_p, max_new=40))
+    for _ in range(20):            # 2 prefill chunks + 18 decodes: the
+        if not eng.scheduler.has_work():       # table crosses 8 pages
+            break
+        eng.step()
+    for j, p in enumerate(prompts_for(cfg, 29 + uid0, (3, 3))):
+        eng.submit(Request(uid=uid0 + 1 + j, prompt=p, max_new=3))
+    _drain(eng)                    # shorts finish first; long drains solo
+    eng.finished.clear()
+
+
+def _sentinel_probe(eng, cfg, uid):
+    """Post-warm traffic: one short request served solo — the shape the
+    table-width HWM keeps stable (and its absence destabilizes)."""
+    p, = prompts_for(cfg, 43, (3,))
+    eng.submit(Request(uid=uid, prompt=p, max_new=3))
+    _drain(eng)
+    return int(eng.obs.registry.value("step_retraces_total"))
+
+
+def test_warm_engine_serves_fresh_traffic_with_zero_retraces():
+    """The zero-retrace regression gate: warm-up passes repeat until one
+    compiles nothing new, then mark_warm() arms the sentinel and fresh
+    solo traffic must hit only cached shapes — the table-width high-water
+    mark (PR 8) guarantees the table's P axis never shrinks under it."""
+    cfg, params = build()
+    eng = _sentinel_engine(cfg, params)
+    for i in range(6):
+        t0 = eng.trace_count
+        _sentinel_warm_pass(eng, cfg, uid0=10 * i)
+        if eng.trace_count == t0:
+            break
+    assert eng.trace_count == t0, "warm-up never became trace-stable"
+    assert eng.obs.registry.value(
+        "step_traces_total") == eng.trace_count
+
+    eng.obs.mark_warm()
+    assert _sentinel_probe(eng, cfg, uid=900) == 0
+
+
+def test_sentinel_catches_table_width_hwm_revert(monkeypatch):
+    """The discriminating half of the gate: revert the PR 8 high-water
+    mark (let the table width shrink to fit the resident mix) and the
+    SAME warm-up + probe shows retraces > 0 — a solo short request packs
+    at a narrow table width no warm-up shape ever used.  Proves the gate
+    fails if the shape-stability fix regresses, rather than passing
+    vacuously."""
+    orig = Scheduler.pack
+
+    def pack_without_hwm(self, plans):
+        self._table_pages = 1          # the revert: no high-water mark
+        return orig(self, plans)
+
+    monkeypatch.setattr(Scheduler, "pack", pack_without_hwm)
+    cfg, params = build()
+    eng = _sentinel_engine(cfg, params)
+    for i in range(6):
+        t0 = eng.trace_count
+        _sentinel_warm_pass(eng, cfg, uid0=10 * i)
+        if eng.trace_count == t0:
+            break
+    eng.obs.mark_warm()
+    assert _sentinel_probe(eng, cfg, uid=900) > 0

@@ -83,8 +83,9 @@ def test_mesh_2_and_4_token_identity_and_pool_invariance():
         assert pool_state(e2) == pool_state(e1) == pool_state(e4)
         assert e1.trace_count == e2.trace_count == e4.trace_count
         assert (e1.mesh_size, e2.mesh_size, e4.mesh_size) == (1, 2, 4)
-        per_layer = (cfg.num_heads * cfg.d_head
-                     * np.dtype(cfg.dtype).itemsize)
+        # the gather moves the f32 attention-output activation, not a
+        # cfg.dtype (bf16) value — itemsize 4 (see measure_collective_bytes)
+        per_layer = cfg.num_heads * cfg.d_head * 4
         assert e1.collective_bytes_per_token == 0
         assert e2.collective_bytes_per_token == cfg.num_layers * per_layer // 2
         assert e4.collective_bytes_per_token == cfg.num_layers * per_layer * 3 // 4
@@ -104,6 +105,32 @@ def test_mesh_2_gqa_identity_float_and_int8():
             b, _ = serve(cfg, params, 2)
             assert a == b, (kv_quant, a, b)
         print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_mesh_2_measured_collective_bytes_cross_check():
+    """The *measured* collective accounting — per-device wire bytes walked
+    out of the compiled ragged step's optimized HLO — must agree with the
+    analytic model: every packed stream row (live or dead) runs the
+    per-layer head all-gather, so ``measure_collective_bytes(width=t)``
+    ≈ ``collective_bytes_per_token × t``.  Off-mesh it is exactly 0, and
+    the number lands in the ``collective_bytes_per_step`` gauge (the
+    registry feeds ``/metrics`` and the sharded bench family)."""
+    out = _run("""
+        cfg, params = build(num_heads=4, num_kv_heads=4)
+        _, e1 = serve(cfg, params, None)
+        assert e1.measure_collective_bytes() == 0
+        assert e1.obs.registry.value("collective_bytes_per_step") == 0
+        _, e2 = serve(cfg, params, 2)
+        t = 16
+        measured = e2.measure_collective_bytes(width=t)
+        analytic = e2.collective_bytes_per_token * t
+        assert measured > 0 and analytic > 0, (measured, analytic)
+        err = abs(measured - analytic) / analytic
+        assert err <= 0.05, (measured, analytic, err)
+        assert e2.obs.registry.value("collective_bytes_per_step") == measured
+        print("OK", measured, analytic)
     """)
     assert "OK" in out
 
